@@ -1,0 +1,27 @@
+"""Shared helpers for the paper-table benchmarks."""
+from __future__ import annotations
+
+import time
+
+
+class Rows:
+    """Collects (name, value, derived) rows and prints them as CSV."""
+
+    def __init__(self, title: str):
+        self.title = title
+        self.rows: list[tuple[str, float, str]] = []
+
+    def add(self, name: str, value: float, derived: str = "") -> None:
+        self.rows.append((name, value, derived))
+        print(f"{name},{value:.6g},{derived}")
+
+    def timeit(self, name: str, fn, *args, **kwargs):
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        us = (time.perf_counter() - t0) * 1e6
+        self.add(f"{name}.us_per_call", us)
+        return out
+
+
+def banner(title: str) -> None:
+    print(f"\n=== {title} ===")

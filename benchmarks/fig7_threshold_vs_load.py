@@ -1,0 +1,59 @@
+"""Fig 7: quality (% tweets above SLA) and cost (CPU-hours) of the threshold
+algorithm (60..99% CPU usage) vs the load algorithm (quantiles 90..99.999%) on
+five matches (england/france left out of the figure by the paper: all-perfect)."""
+from __future__ import annotations
+
+from benchmarks.common import Rows, banner
+from repro.core.autoscaler import LoadPolicy, ThresholdPolicy
+from repro.core.simulator import SimConfig, generate_trace, run_scenario
+from repro.core.simulator.distributions import ServiceModel
+
+THRESHOLDS = [0.60, 0.70, 0.80, 0.90, 0.99]
+QUANTILES = [0.90, 0.99, 0.999, 0.9999, 0.99999]
+MATCHES5 = ["japan", "mexico", "italy", "uruguay", "spain"]
+
+#: paper §V-A reference points
+PAPER_POINTS = {
+    ("spain", "load", 0.99999): (1.67, 20.97),
+    ("spain", "threshold", 0.60): (2.52, 31.04),
+    ("uruguay", "load", 0.99999): (0.05, 7.14),
+    ("uruguay", "threshold", 0.60): (0.25, 12.46),
+}
+
+
+def run(quick: bool = False) -> Rows:
+    banner("Fig 7: threshold vs load across matches")
+    rows = Rows("fig7")
+    sm = ServiceModel()
+    matches = ["spain", "uruguay"] if quick else MATCHES5
+    ths = [0.60, 0.90] if quick else THRESHOLDS
+    qs = [0.90, 0.99999] if quick else QUANTILES
+    seeds = [0] if quick else [0, 1]
+    cfg = SimConfig()
+    for m in matches:
+        traces = [generate_trace(m, seed=s) for s in seeds]
+        for th in ths:
+            v = c = 0.0
+            for tr in traces:
+                r = run_scenario(tr, ThresholdPolicy(th), cfg)
+                v += 100.0 * r.violation_rate / len(traces)
+                c += r.cpu_hours / len(traces)
+            ref = PAPER_POINTS.get((m, "threshold", th))
+            rows.add(f"{m}.threshold{int(th * 100)}.viol_pct", v,
+                     f"paper {ref[0]}" if ref else "")
+            rows.add(f"{m}.threshold{int(th * 100)}.cpu_hours", c,
+                     f"paper {ref[1]}" if ref else "")
+        for q in qs:
+            v = c = 0.0
+            for tr in traces:
+                r = run_scenario(tr, LoadPolicy(sm, quantile=q), cfg)
+                v += 100.0 * r.violation_rate / len(traces)
+                c += r.cpu_hours / len(traces)
+            ref = PAPER_POINTS.get((m, "load", q))
+            rows.add(f"{m}.load{q:g}.viol_pct", v, f"paper {ref[0]}" if ref else "")
+            rows.add(f"{m}.load{q:g}.cpu_hours", c, f"paper {ref[1]}" if ref else "")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,55 @@
+"""The abstract's headline claims:
+
+* "reduce the number of SLA violations by up to 95%"  (appdata vs threshold, Spain)
+* "reduce resource requirements by up to 33%"          (load vs threshold@60, Spain;
+   43% on Uruguay per §V-A)
+"""
+from __future__ import annotations
+
+from benchmarks.common import Rows, banner
+from repro.core.autoscaler import AppDataPolicy, CompositePolicy, LoadPolicy, ThresholdPolicy
+from repro.core.simulator import SimConfig, generate_trace, run_scenario
+from repro.core.simulator.distributions import ServiceModel
+
+
+def run(quick: bool = False) -> Rows:
+    banner("Headline claims (abstract / SSV)")
+    rows = Rows("headline")
+    sm = ServiceModel()
+    cfg = SimConfig()
+    seeds = [0] if quick else [0, 1]
+
+    def avg(match, mk):
+        v = c = 0.0
+        for s in seeds:
+            tr = generate_trace(match, seed=s)
+            r = run_scenario(tr, mk(), cfg)
+            v += 100.0 * r.violation_rate / len(seeds)
+            c += r.cpu_hours / len(seeds)
+        return v, c
+
+    for match, paper_save in [("uruguay", 43.0), ("spain", 33.0)]:
+        lv, lc = avg(match, lambda: LoadPolicy(sm, quantile=0.99999))
+        tv, tc = avg(match, lambda: ThresholdPolicy(0.60))
+        save = 100.0 * (tc - lc) / tc
+        rows.add(f"{match}.load_vs_thr60_cpu_saving_pct", save, f"paper {paper_save}")
+        rows.add(f"{match}.load.viol_pct", lv)
+        rows.add(f"{match}.thr60.viol_pct", tv)
+
+    av, ac = avg("spain", lambda: CompositePolicy(
+        [LoadPolicy(sm, quantile=0.99999), AppDataPolicy(extra_units=10)]))
+    lv, lc = avg("spain", lambda: LoadPolicy(sm, quantile=0.99999))
+    tv, tc = avg("spain", lambda: ThresholdPolicy(0.60))
+    rows.add("spain.appdata10.viol_pct", av, "paper 0.12")
+    rows.add("spain.appdata10.cpu_hours", ac, "paper 34.78")
+    rows.add("spain.appdata_vs_load_viol_reduction_pct",
+             100.0 * (lv - av) / max(lv, 1e-9), "paper 92.81")
+    rows.add("spain.appdata_vs_thr60_viol_reduction_pct",
+             100.0 * (tv - av) / max(tv, 1e-9), "paper 95.24")
+    rows.add("spain.appdata_vs_thr60_cost_increase_pct",
+             100.0 * (ac - tc) / tc, "paper 12.05")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

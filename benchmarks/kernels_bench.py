@@ -1,0 +1,61 @@
+"""Kernel micro-benchmarks: interpret-mode correctness + jnp-path timing on CPU
+(the TPU numbers come from the dry-run roofline, not from wall clock here)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Rows, banner
+
+
+def run(quick: bool = False) -> Rows:
+    banner("Kernels: interpret-mode validation + oracle timing")
+    rows = Rows("kernels")
+
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import attention_ref
+    B, S, Hq, Hkv, D = 1, 256 if quick else 512, 4, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, D))
+    k = jax.random.normal(ks[1], (B, S, Hkv, D))
+    v = jax.random.normal(ks[2], (B, S, Hkv, D))
+    out = flash_attention(q, k, v, block_q=128, block_k=128)
+    ref = attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                        v.transpose(0, 2, 1, 3), None).transpose(0, 2, 1, 3)
+    rows.add("flash_attention.max_err", float(jnp.abs(out - ref).max()))
+    f = jax.jit(lambda q, k, v: attention_ref(q, k, v, None))
+    qT = q.transpose(0, 2, 1, 3); kT = k.transpose(0, 2, 1, 3); vT = v.transpose(0, 2, 1, 3)
+    f(qT, kT, vT).block_until_ready()
+    t0 = time.perf_counter(); f(qT, kT, vT).block_until_ready()
+    rows.add("attention_ref.us_per_call", (time.perf_counter() - t0) * 1e6)
+
+    from repro.kernels.decode_attention.ops import decode_attention
+    from repro.kernels.decode_attention.ref import decode_attention_ref
+    S2 = 512 if quick else 2048
+    kc = jax.random.normal(ks[1], (B, S2, Hkv, D))
+    vc = jax.random.normal(ks[2], (B, S2, Hkv, D))
+    q1 = jax.random.normal(ks[0], (B, 1, Hq, D))
+    out = decode_attention(q1, kc, vc, S2 // 2, block_k=256)
+    ref = decode_attention_ref(q1[:, 0], kc, vc, S2 // 2)[:, None]
+    rows.add("decode_attention.max_err", float(jnp.abs(out - ref).max()))
+
+    from repro.kernels.ssd.ops import ssd_intra
+    from repro.kernels.ssd.ref import ssd_intra_ref
+    b, nc, qq, h, p, n = 1, 2, 64, 4, 32, 16
+    ks4 = jax.random.split(jax.random.PRNGKey(1), 4)
+    xb = jax.random.normal(ks4[0], (b, nc, qq, h, p))
+    acs = -jnp.abs(jax.random.normal(ks4[1], (b, nc, qq, h))).cumsum(2) * 0.1
+    Bh = jax.random.normal(ks4[2], (b, nc, qq, h, n))
+    Ch = jax.random.normal(ks4[3], (b, nc, qq, h, n))
+    out = ssd_intra(xb, acs, Bh, Ch)
+    ref = jnp.stack([ssd_intra_ref(xb[:, i], acs[:, i], Bh[:, i], Ch[:, i])
+                     for i in range(nc)], 1)
+    rows.add("ssd_intra.max_err", float(jnp.abs(out - ref).max()))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

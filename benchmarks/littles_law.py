@@ -1,0 +1,88 @@
+"""Testbed calibration benchmark (paper §IV-A).
+
+Validates that the calibrated service model reproduces the paper's testbed
+statistics and Little's law:
+
+  L = 15,875.32 in-flight tweets,  W = 192.09 s,  lambda = 82.65 tweets/s,
+  L ~= lambda * W  (paper: 15,876.24)
+
+The testbed read all tweets at once and processed them "as fast as its CPU was
+able", holding a roughly constant in-flight population; we reproduce it with an
+in-flight-capped processor-sharing drain at 2.6 GHz / 97.95% utilization.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Rows, banner
+from repro.core.simulator.distributions import (
+    CYCLES_PER_DELAY_SECOND,
+    TESTBED_FREQ_HZ,
+    TESTBED_IN_FLIGHT,
+    TESTBED_INPUT_RATE,
+    TESTBED_MEAN_DELAY_S,
+    TESTBED_UTILIZATION,
+    ServiceModel,
+)
+
+
+def run(quick: bool = False) -> Rows:
+    banner("Little's law / testbed calibration (paper SSIV-A)")
+    rows = Rows("littles_law")
+    sm = ServiceModel()
+
+    # --- analytic identities -------------------------------------------------------
+    mean_cycles = sm.mean_cycles()
+    rows.add("mean_cycles_per_tweet", mean_cycles)
+    # completion rate of a saturated 1-CPU 2.6 GHz testbed
+    lam = TESTBED_FREQ_HZ * TESTBED_UTILIZATION / mean_cycles
+    rows.add("implied_lambda_tweets_per_s", lam, f"paper {TESTBED_INPUT_RATE}")
+    W = TESTBED_IN_FLIGHT / lam
+    rows.add("implied_W_seconds", W, f"paper {TESTBED_MEAN_DELAY_S}")
+    rows.add("littles_L_equals_lamW", lam * W, f"paper L={TESTBED_IN_FLIGHT}")
+
+    # --- simulated capped-in-flight drain ------------------------------------------
+    n = 60_000 if quick else 300_000
+    rng = np.random.default_rng(0)
+    cls = sm.sample_classes(rng, n)
+    cycles = sm.sample_cycles(rng, cls)
+    cycles = cycles[cycles > 0.0]
+    cap = int(TESTBED_IN_FLIGHT)
+    capacity = TESTBED_FREQ_HZ  # cycles per 1 s step, single CPU
+    rem = cycles[:cap].copy()
+    head = cap
+    t = 0.0
+    finish, enter = [], np.zeros(cycles.shape[0])
+    enter[:cap] = 0.0
+    done = 0
+    while done < min(cycles.shape[0], n // 2):
+        L = rem.shape[0]
+        if L == 0:
+            break
+        share = capacity / L
+        fin = rem <= share
+        k = int(fin.sum())
+        if k:
+            finish.extend([t + 1.0] * k)
+            done += k
+            rem = rem[~fin]
+            new = cycles[head : head + k]
+            enter[head : head + k] = t + 1.0
+            head += k
+            rem = np.concatenate([rem, new])
+        rem = rem - share  # approximate: excess of finished redistributed next step
+        rem = np.maximum(rem, 0.0)
+        t += 1.0
+    # measured delay for the steady-state middle cohort
+    fin_arr = np.asarray(finish)
+    mid = slice(cap, min(head, fin_arr.shape[0]))
+    delays = fin_arr[mid] - enter[cap : cap + (mid.stop - mid.start)]
+    meas_W = float(np.mean(delays)) if delays.size else float("nan")
+    meas_rate = done / t if t else float("nan")
+    rows.add("simulated_W_seconds", meas_W, f"analytic {W:.1f}")
+    rows.add("simulated_lambda", meas_rate, f"analytic {lam:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

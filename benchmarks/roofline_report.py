@@ -1,0 +1,136 @@
+"""Aggregate results/dryrun.jsonl into the EXPERIMENTS.md roofline tables.
+
+Per (arch x shape) on the single-pod mesh:
+  compute / memory / collective terms (s), dominant bottleneck,
+  MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) per device,
+  usefulness ratio MODEL_FLOPS / HLO_FLOPs.
+
+Caveat recorded in EXPERIMENTS.md: HLO 'bytes accessed' from the CPU-compiled
+module over-counts HBM traffic (no TPU fusion/layout pipeline), so the memory
+term is an upper bound; the compute term (FLOPs) matches analytic 6ND closely.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+from repro.configs import ARCHS, SHAPES, get_config
+from repro.distributed.hlo_analysis import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+
+def model_flops_per_device(arch: str, shape: str, n_dev: int, mesh_kind: str) -> float:
+    cfg = get_config(arch)
+    sp = SHAPES[shape]
+    n_active = cfg.active_param_count()
+    if sp.kind == "train":
+        tokens = sp.global_batch * sp.seq_len
+        return 6.0 * n_active * tokens / n_dev
+    if sp.kind == "prefill":
+        tokens = sp.global_batch * sp.seq_len
+        return 2.0 * n_active * tokens / n_dev
+    # decode: one token per sequence
+    return 2.0 * n_active * sp.global_batch / n_dev
+
+
+def _default_path():
+    import os
+    return ("results/dryrun_v2.jsonl" if os.path.exists("results/dryrun_v2.jsonl")
+            else "results/dryrun.jsonl")
+
+
+def analytic_memory_bytes_per_device(arch: str, shape: str, n_dev: int) -> float:
+    """TPU-side HBM-traffic estimate per device per step (lower bound):
+    weights read (bf16, sharded) + KV/state cache read+write (decode) +
+    activation traffic ~ 2 x weights for train (grad+opt update)."""
+    cfg = get_config(arch)
+    sp = SHAPES[shape]
+    w_bytes = cfg.param_count() * 2 / n_dev
+    if sp.kind == "train":
+        # weights + grads f32 + adam m,v f32 touched once each, plus saved
+        # activations written fwd / read bwd (~4 passes with block remat)
+        acts = sp.global_batch * sp.seq_len * cfg.d_model * 2             * max(cfg.n_layers, 1) * 4 / n_dev
+        return w_bytes * (1 + 2 + 4 + 4 + 4) + acts
+    if sp.kind == "prefill":
+        return w_bytes + _cache_bytes(cfg, sp) / n_dev
+    return w_bytes + 2.0 * _cache_bytes(cfg, sp) / n_dev   # decode: read+write
+
+
+def _cache_bytes(cfg, sp) -> float:
+    hd = cfg.resolved_head_dim
+    per_tok = cfg.kv_cache_dtype == "int8" and (hd + 4) or 2 * hd
+    attn_layers = cfg.n_layers if cfg.family not in ("ssm", "hybrid") else (
+        0 if not cfg.shared_attn_every else cfg.n_layers // cfg.shared_attn_every)
+    kv = 2 * attn_layers * sp.global_batch * sp.seq_len * cfg.n_kv_heads * per_tok
+    if cfg.ssm:
+        d_in = cfg.ssm.expand * cfg.d_model
+        h = d_in // cfg.ssm.head_dim
+        kv += cfg.n_layers * sp.global_batch * h * cfg.ssm.head_dim             * cfg.ssm.d_state * 4
+    return float(kv)
+
+
+def load(path=None, mesh="single"):
+    path = path or _default_path()
+    rows = {}
+    for line in open(path):
+        r = json.loads(line)
+        if r.get("mesh") != mesh:
+            continue
+        rows[(r["arch"], r["shape"])] = r
+    return rows
+
+
+def report(path=None, mesh="single", out=sys.stdout):
+    rows = load(path, mesh)
+    w = out.write
+    w(f"| arch | shape | t_comp 6ND (s) | t_mem analytic (s) | t_mem HLO (s) | "
+      f"t_coll (s) | dominant | 6ND/dev (TF) | HLO/dev (TF) | useful | coll MB/dev |\n")
+    w("|---|---|---|---|---|---|---|---|---|---|---|\n")
+    for arch in ARCHS:
+        for shape in SHAPES:
+            r = rows.get((arch, shape))
+            if r is None:
+                continue
+            if r["status"] == "skipped":
+                w(f"| {arch} | {shape} | - | - | - | skipped (full attention) "
+                  f"| - | - | - | - |\n")
+                continue
+            t = r["roofline"]
+            hlo_f = r["cost"].get("flops", 0.0) or 0.0
+            mf = model_flops_per_device(arch, shape, r["devices"], mesh)
+            useful = mf / hlo_f if hlo_f else float("nan")
+            coll = r["collectives"]["total_bytes"] / r["devices"] / 1e6
+            t_c6 = mf / PEAK_FLOPS_BF16
+            t_ma = analytic_memory_bytes_per_device(arch, shape, r["devices"]) / HBM_BW
+            dom = "compute" if t_c6 >= max(t_ma, t["t_collective_s"]) else (
+                "memory" if t_ma >= t["t_collective_s"] else "collective")
+            w(f"| {arch} | {shape} | {t_c6:.2e} | {t_ma:.2e} | {t['t_memory_s']:.2e} "
+              f"| {t['t_collective_s']:.2e} | {dom} "
+              f"| {mf / 1e12:.3f} | {hlo_f / 1e12:.3f} | {useful:.2f} | {coll:.1f} |\n")
+
+
+def pick_hillclimb_cells(path=None):
+    """(worst useful-ratio, most collective-bound, paper-representative)."""
+    rows = load(path)
+    scored = []
+    for (arch, shape), r in rows.items():
+        if r["status"] != "ok":
+            continue
+        hlo_f = r["cost"].get("flops", 0.0) or 0.0
+        mf = model_flops_per_device(arch, shape, r["devices"], "single")
+        useful = mf / hlo_f if hlo_f else 0.0
+        coll_frac = r["roofline"]["t_collective_s"] / max(
+            sum(r["roofline"][k] for k in
+                ("t_compute_s", "t_memory_s", "t_collective_s")), 1e-30)
+        scored.append(((arch, shape), useful, coll_frac))
+    worst_useful = min(scored, key=lambda s: s[1])
+    most_coll = max(scored, key=lambda s: s[2])
+    return worst_useful, most_coll
+
+
+if __name__ == "__main__":
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "single"
+    report(mesh=mesh)
+    if mesh == "single":
+        wu, mc = pick_hillclimb_cells()
+        print(f"\nworst-useful cell: {wu[0]} ratio={wu[1]:.3f}")
+        print(f"most-collective cell: {mc[0]} frac={mc[2]:.3f}")

@@ -1,0 +1,48 @@
+"""Benchmark harness: one module per paper table/figure + framework benches.
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import time
+
+MODULES = [
+    "littles_law",
+    "table1_correlation",
+    "fig3_burst_lead",
+    "fig7_threshold_vs_load",
+    "fig8_appdata",
+    "ablation_window",
+    "headline_claims",
+    "elastic_serving",
+    "kernels_bench",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="reduced seeds/configs")
+    ap.add_argument("--only", default=None, help="run a single benchmark module")
+    args = ap.parse_args()
+
+    names = [args.only] if args.only else MODULES
+    t0 = time.time()
+    failures = []
+    for name in names:
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            mod.run(quick=args.quick)
+        except Exception as e:  # keep going; report at the end
+            failures.append((name, repr(e)))
+            print(f"{name},FAILED,{e!r}")
+    print(f"\nbenchmarks done in {time.time() - t0:.1f}s")
+    if failures:
+        print("FAILURES:", failures)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Table I: Pearson correlation of per-minute sentiment with tweet volume at lags
+0..10 minutes, on the Brazil vs Spain trace (ensemble over seeds)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Rows, banner
+from repro.core.signals import lag_correlation_table
+from repro.core.simulator import generate_trace
+
+PAPER = [0.79, 0.78, 0.76, 0.76, 0.76, 0.75, 0.75, 0.74, 0.72, 0.71, 0.70]
+
+
+def run(quick: bool = False) -> Rows:
+    banner("Table I: sentiment<->volume lag correlation (Spain)")
+    rows = Rows("table1")
+    seeds = [0] if quick else [0, 1, 2, 3, 4]
+    acc = np.zeros(11)
+    for seed in seeds:
+        tr = generate_trace("spain", seed=seed)
+        acc += np.array([c for _, c in lag_correlation_table(tr)])
+    acc /= len(seeds)
+    for lag in range(11):
+        rows.add(f"pearson_lag{lag}", float(acc[lag]), f"paper {PAPER[lag]}")
+    rows.add("decay_ratio_r10_over_r0", float(acc[10] / acc[0]),
+             f"paper {PAPER[10] / PAPER[0]:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Quickstart: the paper's experiment in five lines, then the LLM substrate.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+# ---- 1. the paper: application-data auto-scaling on a match trace ---------------
+from repro.core.autoscaler import AppDataPolicy, CompositePolicy, LoadPolicy, ThresholdPolicy
+from repro.core.simulator import SimConfig, generate_trace, run_scenario
+from repro.core.simulator.distributions import ServiceModel
+
+trace = generate_trace("uruguay", seed=0)
+sm = ServiceModel()
+for policy in [
+    ThresholdPolicy(0.6),
+    LoadPolicy(sm, quantile=0.99999),
+    CompositePolicy([LoadPolicy(sm, quantile=0.99999), AppDataPolicy(extra_units=5)]),
+]:
+    res = run_scenario(trace, policy, SimConfig())
+    print(f"{res.policy:35s} violations {100 * res.violation_rate:6.2f}%  "
+          f"cost {res.cpu_hours:6.2f} CPU-h")
+
+# ---- 2. the substrate: train a small LM for a few steps -------------------------
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.optim import AdamWConfig, adamw_init
+from repro.training import make_train_step
+from repro.data import DataConfig, TokenStream
+
+cfg = get_smoke_config("smollm-135m")
+model = build_model(cfg)
+params = model.init_params(jax.random.key(0))
+opt = adamw_init(params)
+step = jax.jit(make_train_step(model, AdamWConfig(lr=1e-3, total_steps=20)),
+               donate_argnums=(0, 1))
+data = TokenStream(DataConfig(vocab=cfg.vocab, seq_len=64, global_batch=4))
+for i in range(20):
+    params, opt, m = step(params, opt, data.batch(i))
+    if i % 5 == 0:
+        print(f"step {i:3d}  loss {float(m['loss']):.4f}")
+
+# ---- 3. serve it with continuous batching ----------------------------------------
+from repro.serving import Request, ServeConfig, ServingEngine
+
+eng = ServingEngine(model, params, ServeConfig(max_batch=4, max_len=96))
+rng = np.random.default_rng(0)
+for i in range(6):
+    eng.submit(Request(rid=i, prompt=rng.integers(0, cfg.vocab, 8).astype(np.int32),
+                       max_new_tokens=4))
+eng.run_until_drained()
+print(f"served {len(eng.completed)} requests in {eng.step_count} engine steps")

@@ -1,0 +1,17 @@
+"""End-to-end training driver: train a reduced model for a few hundred steps
+with checkpoint/restart fault tolerance, and verify the loss goes down.
+
+Run:  PYTHONPATH=src python examples/train_losscurve.py
+(Full-size variant on a real pod: python -m repro.launch.train --arch qwen2.5-3b
+ --steps 500 --batch 256 --seq 4096.)
+"""
+import subprocess
+import sys
+
+cmd = [sys.executable, "-m", "repro.launch.train",
+       "--arch", "qwen2.5-3b", "--smoke",
+       "--steps", "200", "--batch", "8", "--seq", "128",
+       "--ckpt-dir", "results/ckpt_example", "--ckpt-every", "50",
+       "--log-every", "20"]
+print("launching:", " ".join(cmd))
+sys.exit(subprocess.run(cmd, env={"PYTHONPATH": "src", **__import__('os').environ}).returncode)

@@ -1,0 +1,9 @@
+from repro.checkpoint.store import (
+    CheckpointManager,
+    load_checkpoint,
+    restore_resharded,
+    save_checkpoint,
+)
+
+__all__ = ["save_checkpoint", "load_checkpoint", "restore_resharded",
+           "CheckpointManager"]

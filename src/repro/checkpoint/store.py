@@ -1,0 +1,146 @@
+"""Sharded checkpointing with reshard-on-restore.
+
+Format: one ``.npz`` per checkpoint step holding every leaf (flattened tree
+paths as keys) + a JSON sidecar with step metadata.  Saves go through a
+temp-file rename so a crash mid-save never corrupts the latest checkpoint
+(atomic on POSIX).  ``restore_resharded`` device_puts each leaf with the
+NamedSharding derived for the *new* mesh -- this is the mechanism behind both
+fault-tolerant restart at a different world size and the elastic serving
+layer's replica scaling.
+
+On a real multi-host pod each host writes its addressable shards and restore
+uses ``jax.make_array_from_single_device_arrays``; the single-process fallback
+(here) degenerates to full-array save/load with identical semantics.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import threading
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+
+SEP = "/"
+_BF16 = "__bf16__"     # npz has no native bfloat16: stored as uint16 bit pattern
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype == ml_dtypes.bfloat16:
+            flat[key + _BF16] = arr.view(np.uint16)
+        else:
+            flat[key] = arr
+    return flat
+
+
+def _unflatten_into(template, flat: dict):
+    def one(path, leaf):
+        key = SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        if key + _BF16 in flat:
+            arr = flat[key + _BF16].view(ml_dtypes.bfloat16)
+        else:
+            arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: ckpt {arr.shape} vs "
+                             f"model {leaf.shape}")
+        return arr.astype(leaf.dtype)
+    return jax.tree_util.tree_map_with_path(one, template)
+
+
+def save_checkpoint(path: str, tree, *, step: int = 0, extra: dict | None = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".", suffix=".npz")
+    os.close(fd)
+    np.savez(tmp, **flat)
+    os.replace(tmp, path)
+    meta = {"step": step, **(extra or {})}
+    with open(path + ".meta.json", "w") as f:
+        json.dump(meta, f)
+    return path
+
+
+def load_checkpoint(path: str, template):
+    with np.load(path, allow_pickle=False) as z:
+        flat = {k: z[k] for k in z.files}
+    tree = _unflatten_into(template, flat)
+    meta = {}
+    if os.path.exists(path + ".meta.json"):
+        meta = json.load(open(path + ".meta.json"))
+    return tree, meta
+
+
+def restore_resharded(path: str, template, shardings):
+    """Load + device_put each leaf with the sharding for the NEW mesh."""
+    tree, meta = load_checkpoint(path, template)
+    tree = jax.device_put(tree, shardings)
+    return tree, meta
+
+
+class CheckpointManager:
+    """Rotating checkpoint directory with async (thread) save option."""
+
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    def _path(self, step: int) -> str:
+        return os.path.join(self.dir, f"ckpt_{step:08d}.npz")
+
+    def latest(self) -> str | None:
+        cks = sorted(f for f in os.listdir(self.dir)
+                     if f.startswith("ckpt_") and f.endswith(".npz"))
+        return os.path.join(self.dir, cks[-1]) if cks else None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save(self, tree, step: int, extra: dict | None = None):
+        # snapshot to host BEFORE returning control (so training can mutate
+        # donated buffers); the file write happens on a background thread.
+        host_tree = jax.tree.map(lambda a: np.asarray(a), tree)
+        self.wait()
+
+        def _write():
+            save_checkpoint(self._path(step), host_tree, step=step, extra=extra)
+            self._gc()
+
+        if self.async_save:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+        else:
+            _write()
+
+    def _gc(self):
+        cks = sorted(f for f in os.listdir(self.dir)
+                     if f.startswith("ckpt_") and f.endswith(".npz"))
+        for f in cks[: -self.keep]:
+            for suffix in ("", ".meta.json"):
+                try:
+                    os.remove(os.path.join(self.dir, f + suffix))
+                except OSError:
+                    pass
+
+    def restore_latest(self, template, shardings=None):
+        path = self.latest()
+        if path is None:
+            return None, {}
+        if shardings is not None:
+            return restore_resharded(path, template, shardings)
+        return load_checkpoint(path, template)
+
+
+__all__ = ["save_checkpoint", "load_checkpoint", "restore_resharded",
+           "CheckpointManager"]

@@ -1,0 +1,7 @@
+from repro.core.autoscaler.base import CompositePolicy, Decision, Observation, Policy
+from repro.core.autoscaler.policies import AppDataPolicy, LoadPolicy, ThresholdPolicy
+
+__all__ = [
+    "CompositePolicy", "Decision", "Observation", "Policy",
+    "AppDataPolicy", "LoadPolicy", "ThresholdPolicy",
+]

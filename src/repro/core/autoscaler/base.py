@@ -1,0 +1,89 @@
+"""Auto-scaling policy interface shared by the tweet simulator (paper repro) and the
+elastic LLM-serving runtime (`repro.core.elastic`).
+
+A policy sees an :class:`Observation` once per adaptation period and returns a
+:class:`Decision`.  The *controller* (simulator engine or replica manager) owns the
+mechanics the paper fixes in Table III: the 60 s adaptation frequency, the 60 s
+resource-provisioning delay, the 1-unit-at-a-time downscale limit, and the >= 1
+resource floor.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Observation:
+    """What a policy may look at.  Three tiers, per the paper's taxonomy:
+
+    * infrastructure level -- ``utilization``;
+    * system level -- ``n_in_system`` (queue + in service), ``input_rate``;
+    * application level -- the sentiment-window means (data produced *by* the app).
+    """
+
+    time: float
+    n_units: int                      # currently usable resources (CPUs / replicas)
+    n_pending: int                    # allocated, still inside the provisioning delay
+    utilization: float                # mean busy fraction over the last adapt window
+    n_in_system: int
+    input_rate: float                 # arrivals/s over the last adapt window
+    app_window_mean: float            # mean app-signal, last window (post-time indexed)
+    app_prev_window_mean: float       # mean app-signal, window before that
+    app_window_count: int             # how many signal samples backed app_window_mean
+
+
+@dataclass(frozen=True)
+class Decision:
+    """delta > 0 allocates (subject to provisioning delay); delta < 0 releases."""
+
+    delta: int = 0
+    reason: str = ""
+
+    def __add__(self, other: "Decision") -> "Decision":
+        reason = ";".join(r for r in (self.reason, other.reason) if r)
+        return Decision(self.delta + other.delta, reason)
+
+
+class Policy:
+    """Base class.  Policies are stateful (e.g. edge detection) but cheap."""
+
+    name = "base"
+
+    def reset(self) -> None:  # called once per simulation run
+        pass
+
+    def decide(self, obs: Observation) -> Decision:
+        raise NotImplementedError
+
+    def describe(self) -> str:
+        return self.name
+
+
+class CompositePolicy(Policy):
+    """Run several policies side by side (paper: appdata "runs alongside the load
+    algorithm").  Upscale requests add; downscale is capped at -1 by the controller."""
+
+    name = "composite"
+
+    def __init__(self, policies: list[Policy]):
+        self.policies = list(policies)
+
+    def reset(self) -> None:
+        for p in self.policies:
+            p.reset()
+
+    def decide(self, obs: Observation) -> Decision:
+        total = Decision()
+        for p in self.policies:
+            d = p.decide(obs)
+            # A positive vote from any sub-policy wins over another's -1 release.
+            if d.delta > 0 and total.delta < 0:
+                total = dataclasses.replace(total, delta=0)
+            if total.delta > 0 and d.delta < 0:
+                d = dataclasses.replace(d, delta=0)
+            total = total + d
+        return total
+
+    def describe(self) -> str:
+        return "+".join(p.describe() for p in self.policies)

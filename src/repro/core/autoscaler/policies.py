@@ -1,0 +1,158 @@
+"""The paper's three auto-scaling algorithms (§IV-C).
+
+* :class:`ThresholdPolicy` -- the classic infrastructure-metric baseline: +1 unit when
+  mean CPU usage exceeds the threshold, -1 when it drops below 50%.
+* :class:`LoadPolicy` -- a-priori knowledge of the service-demand distributions:
+  estimates the time to drain everything currently in the system from a configurable
+  quantile of the per-class Weibulls; scales *multiplicatively*
+  (``units' = ceil(units * expectedDelay / SLA)``), releases one unit at a time when
+  the estimate falls below SLA/2.
+* :class:`AppDataPolicy` -- the application-data trigger: compares the mean sentiment
+  score of the last 120 s window (tweets indexed by *post time* -- §V-B stresses this)
+  with the window before; a rise >= 0.5 allocates a fixed number of extra units.
+"""
+from __future__ import annotations
+
+import math
+
+from repro.core.autoscaler.base import Decision, Observation, Policy
+from repro.core.simulator.distributions import ServiceModel
+
+
+class ThresholdPolicy(Policy):
+    """CPU-usage threshold rule (§IV-C "threshold algorithm")."""
+
+    name = "threshold"
+
+    def __init__(self, upper: float = 0.9, lower: float = 0.5):
+        if not 0.0 < upper <= 1.0:
+            raise ValueError(f"threshold must be in (0, 1], got {upper}")
+        self.upper = upper
+        self.lower = lower
+
+    def decide(self, obs: Observation) -> Decision:
+        if obs.utilization > self.upper:
+            return Decision(+1, f"util {obs.utilization:.2f} > {self.upper:.2f}")
+        if obs.utilization < self.lower and obs.n_units > 1:
+            return Decision(-1, f"util {obs.utilization:.2f} < {self.lower:.2f}")
+        return Decision()
+
+    def describe(self) -> str:
+        return f"threshold({int(self.upper * 100)}%)"
+
+
+class LoadPolicy(Policy):
+    """A-priori load model (§IV-C "load algorithm").
+
+    ``expectedDelay`` = time to process all tweets currently in the system, assuming
+    every one of them demands the ``quantile``-level service of the a-priori class
+    mixture and the available units are shared egalitarianly:
+
+        expectedDelay = n_in_system * quantile_cycles / (units * freq_hz)
+
+    Upscale when it exceeds the SLA, by the paper's multiplicative rule; downscale by
+    exactly one unit when it falls below half the SLA.
+    """
+
+    name = "load"
+
+    def __init__(
+        self,
+        service_model: ServiceModel,
+        *,
+        quantile: float = 0.99999,
+        sla_s: float = 300.0,
+        freq_hz: float = 2.0e9,
+        count_pending: bool = True,
+    ):
+        self.sm = service_model
+        self.quantile = quantile
+        self.sla_s = sla_s
+        self.freq_hz = freq_hz
+        self.count_pending = count_pending
+        self._q_cycles = service_model.quantile_cycles(quantile)
+        self._mean_cycles = service_model.mean_cycles()
+
+    def expected_delay(self, n_in_system: int, units: int, *, pessimistic: bool = True) -> float:
+        """Drain-time estimate for everything in the system.
+
+        ``pessimistic=True`` prices every tweet at the class-weighted ``quantile``
+        service demand (the paper's early-reaction knob: "the higher the quantile
+        the more pessimistic the model is and more likely it is to react before the
+        SLA is really violated").  ``pessimistic=False`` prices at the mean, which
+        is what the *size* of the allocation is computed from -- this is the
+        reading under which the paper's own published costs are reproducible: load
+        cost sits at the throughput bound and is nearly quantile-invariant (2.76
+        CPU-h across every quantile on England, "cost differences for different
+        quantiles is insignificant"), which is impossible if the allocation size
+        itself scaled with the ~1.6-4.7x quantile inflation.  The quantile still
+        costs slightly more via the earlier trigger and the later release, matching
+        "a higher quantile will also spend more resources".  See DESIGN.md
+        (Deviations).
+        """
+        if units <= 0:
+            return math.inf
+        per = self._q_cycles if pessimistic else self._mean_cycles
+        return n_in_system * per / (units * self.freq_hz)
+
+    def decide(self, obs: Observation) -> Decision:
+        units = obs.n_units + (obs.n_pending if self.count_pending else 0)
+        exp_q = self.expected_delay(obs.n_in_system, units)
+        if exp_q > self.sla_s:
+            exp_mean = self.expected_delay(obs.n_in_system, units, pessimistic=False)
+            target = math.ceil(units * exp_mean / self.sla_s)
+            delta = max(target - obs.n_units - obs.n_pending, 1)
+            return Decision(delta, f"expectedDelay {exp_q:.0f}s > SLA")
+        if exp_q < 0.5 * self.sla_s and obs.n_units > 1:
+            return Decision(-1, f"expectedDelay {exp_q:.0f}s < SLA/2")
+        return Decision()
+
+    def describe(self) -> str:
+        return f"load(q={self.quantile:g})"
+
+
+class AppDataPolicy(Policy):
+    """Application-data peak detector (§IV-C "appdata algorithm").
+
+    Only ever *adds* units ("only deals with peaks, is oblivious to ordinary increases
+    of traffic and runs alongside the load algorithm").  Edge-triggered: a sustained
+    high window fires once, not on every 60 s evaluation while it stays high.
+    """
+
+    name = "appdata"
+
+    def __init__(self, *, jump: float = 0.5, extra_units: int = 1,
+                 min_samples: int = 20, relative: bool = True):
+        """``jump``: required window-mean rise.  ``relative=True`` (default) reads
+        the paper's "increases by 0.5 or more" as a 50% *relative* rise -- with
+        scores bounded in [0,1] and a typical level above 0.4 (Fig 2), an absolute
+        +0.5 jump from the running level is close to unreachable, so the relative
+        reading is the one that can have produced the paper's results.
+        ``relative=False`` gives the literal absolute-difference trigger.
+        See DESIGN.md (Deviations)."""
+        self.jump = jump
+        self.extra_units = extra_units
+        self.min_samples = min_samples
+        self.relative = relative
+        self._armed = True
+
+    def reset(self) -> None:
+        self._armed = True
+
+    def decide(self, obs: Observation) -> Decision:
+        if obs.app_window_count < self.min_samples:
+            return Decision()
+        rise = obs.app_window_mean - obs.app_prev_window_mean
+        if self.relative:
+            rise = rise / obs.app_prev_window_mean if obs.app_prev_window_mean > 1e-6 else 0.0
+        if rise >= self.jump:
+            if self._armed:
+                self._armed = False
+                return Decision(self.extra_units,
+                                f"sentiment +{rise:.2f} >= {self.jump:.2f}")
+            return Decision()
+        self._armed = True
+        return Decision()
+
+    def describe(self) -> str:
+        return f"appdata(+{self.extra_units})"

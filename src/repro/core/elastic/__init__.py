@@ -1,0 +1,10 @@
+from repro.core.elastic.cluster import (
+    ClusterConfig,
+    ElasticCluster,
+    ReplicaSpec,
+    ServeRequest,
+)
+from repro.core.elastic.remesh import elastic_remesh_plan, remesh_params
+
+__all__ = ["ClusterConfig", "ElasticCluster", "ReplicaSpec", "ServeRequest",
+           "elastic_remesh_plan", "remesh_params"]

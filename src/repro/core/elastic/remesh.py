@@ -1,0 +1,46 @@
+"""The real mechanism behind replica elasticity: mesh rebuild + parameter
+resharding.
+
+Scale-out on TPU means: bring up a new slice, rebuild the device mesh at the
+new DP degree, and re-place parameters under the shardings derived for the new
+mesh.  With jax arrays this is a ``device_put`` of the old (possibly
+differently-laid-out) arrays onto the new NamedShardings -- XLA moves only the
+bytes that must move.  Fault-handling uses the same path: on a lost slice,
+rebuild the mesh over the survivors and restore from the latest checkpoint
+(`repro.checkpoint`).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+from repro.distributed.sharding import param_sharding
+from repro.launch.mesh import make_mesh
+
+
+def elastic_remesh_plan(n_devices: int, *, model_parallel: int) -> tuple[int, int]:
+    """(dp, tp) for the new world size; dp absorbs the change."""
+    if n_devices % model_parallel:
+        raise ValueError(f"{n_devices} devices not divisible by tp={model_parallel}")
+    return n_devices // model_parallel, model_parallel
+
+
+def remesh_params(params, new_mesh: Mesh):
+    """Re-place ``params`` for ``new_mesh`` under the standard sharding rules."""
+    abstract = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params)
+    new_sh = param_sharding(abstract, new_mesh)
+    return jax.device_put(params, new_sh)
+
+
+def scale_replicas(params, *, devices, model_parallel: int,
+                   axis_names=("data", "model")) -> tuple:
+    """Build a mesh over ``devices`` at the widest DP degree and re-place
+    params.  Returns (new_mesh, params_on_new_mesh)."""
+    dp, tp = elastic_remesh_plan(len(devices), model_parallel=model_parallel)
+    import numpy as np
+    dev_grid = np.asarray(devices).reshape(dp, tp)
+    new_mesh = Mesh(dev_grid, axis_names)
+    return new_mesh, remesh_params(params, new_mesh)
+
+
+__all__ = ["elastic_remesh_plan", "remesh_params", "scale_replicas"]

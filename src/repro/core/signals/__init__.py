@@ -1,0 +1,8 @@
+from repro.core.signals.analysis import (
+    burst_lead_report,
+    ema,
+    lag_correlation_table,
+    windowed_variation,
+)
+
+__all__ = ["ema", "lag_correlation_table", "windowed_variation", "burst_lead_report"]

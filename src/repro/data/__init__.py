@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, TokenStream, request_stream
+
+__all__ = ["DataConfig", "TokenStream", "request_stream"]

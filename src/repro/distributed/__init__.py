@@ -1,0 +1,8 @@
+from repro.distributed.sharding import (
+    batch_sharding,
+    cache_sharding,
+    param_sharding,
+    shard_params,
+)
+
+__all__ = ["param_sharding", "batch_sharding", "cache_sharding", "shard_params"]

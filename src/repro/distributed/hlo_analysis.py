@@ -1,0 +1,86 @@
+"""Parse compiled (post-SPMD) HLO text for collective traffic + roofline terms.
+
+``compiled.cost_analysis()`` gives FLOPs and HBM bytes but NOT collective
+bytes; those are summed here from the result shapes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute in the
+per-device HLO module.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %ag = bf16[2,128,4096]{2,1,0} all-gather(...)
+_SHAPE_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^=]*?\b(" + "|".join(_COLLECTIVES) + r")\b")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: dict = field(default_factory=dict)
+    count_by_kind: dict = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    def as_dict(self) -> dict:
+        return {
+            "total_bytes": self.total_bytes,
+            "bytes_by_kind": dict(self.bytes_by_kind),
+            "count_by_kind": dict(self.count_by_kind),
+        }
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    st = CollectiveStats()
+    for m in _SHAPE_RE.finditer(hlo_text):
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        b = _shape_bytes(dtype, dims)
+        st.bytes_by_kind[kind] = st.bytes_by_kind.get(kind, 0) + b
+        st.count_by_kind[kind] = st.count_by_kind.get(kind, 0) + 1
+    return st
+
+
+# --- TPU v5e hardware constants (per chip) -----------------------------------------
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # B/s
+ICI_BW = 50e9                   # B/s per link
+
+
+def roofline_terms(flops_per_device: float, hbm_bytes_per_device: float,
+                   collective_bytes_per_device: float) -> dict:
+    """The three per-device roofline terms, in seconds."""
+    t_compute = flops_per_device / PEAK_FLOPS_BF16
+    t_memory = hbm_bytes_per_device / HBM_BW
+    t_collective = collective_bytes_per_device / ICI_BW
+    dominant = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_collective),
+        key=lambda kv: kv[1])[0]
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_collective,
+        "dominant": dominant,
+    }
+
+
+__all__ = ["collective_stats", "CollectiveStats", "roofline_terms",
+           "PEAK_FLOPS_BF16", "HBM_BW", "ICI_BW"]

@@ -1,0 +1,194 @@
+"""Sharding rules: param-path patterns -> PartitionSpec (DP/TP/EP/SP).
+
+Layout summary (model axis = "model", batch over ("pod", "data")):
+
+* vocab/embedding: vocab-sharded; lm_head column-sharded;
+* attention: Q/K/V column-sharded by head, O row-sharded (Megatron layout);
+* MLP: gate/up column-, down row-sharded;
+* MoE: experts sharded on "model" (EP); router replicated;
+* Mamba: z/x/dt head-sharded, B/C (group-shared) replicated, out row-sharded;
+* KV caches: head-sharded when kv_heads % model == 0, else head_dim-sharded
+  (logit contraction over head_dim psums cheaply);
+* long-context (batch 1): KV *sequence* sharded on "data" (SP).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ModelConfig
+
+
+def _last(path) -> str:
+    """Last DictKey name in a jax tree path."""
+    for p in reversed(path):
+        if hasattr(p, "key"):
+            return str(p.key)
+    return ""
+
+
+def _in_stack(path) -> bool:
+    names = {str(p.key) for p in path if hasattr(p, "key")}
+    return bool(names & {"blocks", "enc_blocks", "dec_blocks"})
+
+
+#: rules by leaf name, WITHOUT the stacked leading layer dim
+_RULES = {
+    # attention
+    "wq": P(None, "model"), "wk": P(None, "model"), "wv": P(None, "model"),
+    "xq": P(None, "model"), "xk": P(None, "model"), "xv": P(None, "model"),
+    "bq": P("model"), "bk": P("model"), "bv": P("model"),
+    "wo": P("model", None), "xo": P("model", None),
+    # dense mlp
+    "w_gate": P(None, "model"), "w_up": P(None, "model"), "w_down": P("model", None),
+    # mamba
+    "w_z": P(None, "model"), "w_x": P(None, "model"), "w_dt": P(None, "model"),
+    "w_bc": P(None, None),
+    "conv_x": P(None, "model"), "conv_bc": P(None, None),
+    "A_log": P("model"), "D": P("model"), "dt_bias": P("model"),
+    "norm": P("model"),
+    "out_proj": P("model", None),
+    # norms / misc
+    "ln": P(None), "ln1": P(None), "ln2": P(None), "ln_x": P(None),
+    "router": P(None, None),
+}
+
+#: MoE expert tensors (inside a "moe" subtree): expert dim -> "model"
+_MOE_RULES = {
+    "w_gate": P("model", None, None), "w_up": P("model", None, None),
+    "w_down": P("model", None, None), "router": P(None, None),
+}
+
+
+def _spec_for(path, leaf) -> P:
+    name = _last(path)
+    names = [str(p.key) for p in path if hasattr(p, "key")]
+    if name == "embed":
+        return P("model", None)
+    if name == "lm_head":
+        return P(None, "model")
+    if name in ("ln_f", "ln_enc"):
+        return P(None)
+    rules = _MOE_RULES if "moe" in names else _RULES
+    spec = rules.get(name)
+    if spec is None:
+        spec = P(*([None] * leaf.ndim))
+        return spec
+    if _in_stack(path):
+        spec = P(*((None,) + tuple(spec)))
+    # pad/truncate to leaf rank (biases in unstacked shared_attn etc.)
+    parts = tuple(spec)
+    if len(parts) < leaf.ndim:
+        parts = parts + (None,) * (leaf.ndim - len(parts))
+    elif len(parts) > leaf.ndim:
+        parts = parts[-leaf.ndim:]
+    return P(*parts)
+
+
+def param_sharding(params_abstract, mesh: Mesh):
+    """Pytree of NamedSharding matching ``params_abstract`` (ShapeDtypeStructs).
+
+    Falls back to replication on any dim whose size does not divide the mesh
+    axis (e.g. 15-head smollm TP on 16): correctness first, the hillclimb pass
+    re-shards what matters.
+    """
+    msize = mesh.shape.get("model", 1)
+
+    def one(path, leaf):
+        spec = _spec_for(path, leaf)
+        parts = []
+        for dim, ax in enumerate(tuple(spec) + (None,) * (leaf.ndim - len(tuple(spec)))):
+            if ax == "model" and leaf.shape[dim] % msize != 0:
+                parts.append(None)
+            else:
+                parts.append(ax)
+        # MoE experts with E < model size: shard the FFN hidden dim instead
+        # (per-expert tensor parallelism; see repro.distributed.moe_ep TP mode)
+        name = _last(path)
+        names = [str(pp.key) for pp in path if hasattr(pp, "key")]
+        if "moe" in names and name in ("w_gate", "w_up", "w_down") \
+                and "model" not in parts:
+            f_dim = leaf.ndim - 1 if name in ("w_gate", "w_up") else leaf.ndim - 2
+            if leaf.shape[f_dim] % msize == 0:
+                parts[f_dim] = "model"
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree_util.tree_map_with_path(one, params_abstract)
+
+
+def batch_sharding(batch_abstract, mesh: Mesh):
+    """Inputs: batch dim over ('pod','data'); other dims replicated.  Batch
+    dims smaller than the data axis fall back to replication (long-context
+    decode feeds batch=1)."""
+    daxes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dsize = 1
+    for a in daxes:
+        dsize *= mesh.shape[a]
+
+    def one(path, leaf):
+        if leaf.ndim == 0 or leaf.shape[0] % dsize != 0:
+            return NamedSharding(mesh, P(*([None] * leaf.ndim)))
+        return NamedSharding(mesh, P(*((daxes,) + (None,) * (leaf.ndim - 1))))
+
+    return jax.tree_util.tree_map_with_path(one, batch_abstract)
+
+
+def cache_sharding(cache_abstract, cfg: ModelConfig, mesh: Mesh):
+    """KV / SSM cache shardings.
+
+    Layout (L, B, S, H, D) for attention caches; (L, B, H, P, N) ssm;
+    (L, B, W, C) conv.  Batch on ('pod','data') when divisible, else the
+    SEQUENCE dim goes on 'data' (SP long-context decode); heads on 'model'
+    when divisible, else head_dim on 'model'.
+    """
+    daxes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dsize = 1
+    for a in daxes:
+        dsize *= mesh.shape[a]
+    msize = mesh.shape.get("model", 1)
+
+    def one(path, leaf):
+        name = _last(path)
+        if name in ("k", "v", "xk", "xv", "attn_k", "attn_v",
+                    "k_scale", "v_scale"):
+            L, B, S, H, D = leaf.shape
+            b_ax = daxes if B % dsize == 0 else None
+            s_ax = None
+            if b_ax is None and S % dsize == 0:
+                s_ax = daxes
+            # model axis preference: heads > sequence > head_dim.
+            # Sequence-sharding (flash-decoding-style SP) beats head_dim-sharding
+            # when kv_heads < model size: softmax over the sharded S axis needs
+            # only scalar-sized psums, while hd-sharding forced per-layer KV
+            # all-gathers (measured on mixtral decode_32k -- see EXPERIMENTS SSPerf).
+            h_ax = d_ax = None
+            s_model = None
+            if H % msize == 0:
+                h_ax = "model"
+            elif s_ax is None and S % msize == 0:
+                s_model = "model"
+            elif D % msize == 0 and D > 1:
+                d_ax = "model"
+            return NamedSharding(mesh, P(None, b_ax, s_ax or s_model, h_ax, d_ax))
+        if name == "ssm":
+            L, B, H, Pd, N = leaf.shape
+            b_ax = daxes if B % dsize == 0 else None
+            h_ax = "model" if H % msize == 0 else None
+            return NamedSharding(mesh, P(None, b_ax, h_ax, None, None))
+        if name == "conv":
+            L, B, W, C = leaf.shape
+            b_ax = daxes if B % dsize == 0 else None
+            return NamedSharding(mesh, P(None, b_ax, None, None))
+        return NamedSharding(mesh, P(*([None] * leaf.ndim)))
+
+    return jax.tree_util.tree_map_with_path(one, cache_abstract)
+
+
+def shard_params(params, mesh: Mesh):
+    """Device-put concrete params with the rule shardings (small models/tests)."""
+    abstract = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params)
+    sh = param_sharding(abstract, mesh)
+    return jax.device_put(params, sh)
+
+
+__all__ = ["param_sharding", "batch_sharding", "cache_sharding", "shard_params"]

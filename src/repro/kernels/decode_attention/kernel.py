@@ -1,0 +1,104 @@
+"""Flash-decoding for TPU: single-token attention over a long KV cache.
+
+The CUDA flash-decoding trick (split-K across SMs + cross-SM reduction) maps to
+TPU as a sequential KV-block grid dimension with fp32 VMEM scratch carrying the
+running (max, sum, acc) -- the sequential grid is free on TPU since blocks
+stream through VMEM anyway; the win is never materializing (Hq, S) logits in
+HBM and reading K/V exactly once.
+
+The valid cache length ``pos`` and the window are scalar-prefetch operands, so
+the same compiled kernel serves every decode step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _dec_kernel(s_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                *, block_k: int, group: int, sm_scale: float):
+    ki = pl.program_id(1)
+    nk = pl.num_programs(1)
+    pos = s_ref[0]        # number of valid cache entries (incl. current token)
+    window = s_ref[1]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    k_start = ki * block_k
+    live = k_start < pos
+    live &= jnp.where(window > 0, k_start + block_k - 1 >= pos - window, True)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * sm_scale           # (Hq, d)
+        k = k_ref[0].astype(jnp.float32)                      # (bk, Hkv, d)
+        v = v_ref[0].astype(jnp.float32)
+        Hq = q.shape[0]
+        Hkv = k.shape[1]
+        # GQA: logits[h, t] = q[h] . k[t, h // group]
+        kr = jnp.repeat(k, group, axis=1)                     # (bk, Hq, d)
+        s = jnp.einsum("hd,thd->ht", q, kr)                   # (Hq, bk)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        valid = k_pos < pos
+        valid &= jnp.where(window > 0, k_pos >= pos - window, True)
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_cur = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1)
+        vr = jnp.repeat(v, group, axis=1)                     # (bk, Hq, d)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jnp.einsum("ht,thd->hd", p, vr)
+        m_scr[...] = m_cur
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_fwd(q, k_cache, v_cache, scalars, *, block_k: int = 1024,
+                         interpret: bool = False):
+    """q: (B, Hq, D); caches: (B, S, Hkv, D); scalars: (2,) int32 [pos, window].
+
+    Returns (B, Hq, D).
+    """
+    B, Hq, D = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    group = Hq // Hkv
+    block_k = min(block_k, S)
+    nk = pl.cdiv(S, block_k)
+
+    kernel = functools.partial(_dec_kernel, block_k=block_k, group=group,
+                               sm_scale=D ** -0.5)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, nk),
+        in_specs=[
+            pl.BlockSpec((1, Hq, D), lambda b, ki, s: (b, 0, 0)),
+            pl.BlockSpec((1, block_k, Hkv, D), lambda b, ki, s: (b, ki, 0, 0)),
+            pl.BlockSpec((1, block_k, Hkv, D), lambda b, ki, s: (b, ki, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Hq, D), lambda b, ki, s: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Hq,), jnp.float32),
+            pltpu.VMEM((Hq,), jnp.float32),
+            pltpu.VMEM((Hq, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, D), q.dtype),
+        interpret=interpret,
+    )(scalars, q, k_cache, v_cache)

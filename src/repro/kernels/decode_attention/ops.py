@@ -1,0 +1,27 @@
+"""Jit-ready wrapper for the decode-attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention_fwd
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def decode_attention(q1, k_cache, v_cache, pos, *, window: int | None = None,
+                     block_k: int = 1024):
+    """q1: (B, 1, Hq, D); caches: (B, S, Hkv, D); pos: scalar int32 valid length.
+
+    Returns (B, 1, Hq, D).
+    """
+    scalars = jnp.stack([jnp.asarray(pos, jnp.int32),
+                         jnp.asarray(window if window else -1, jnp.int32)])
+    out = decode_attention_fwd(q1[:, 0], k_cache, v_cache, scalars,
+                               block_k=block_k, interpret=_interpret())
+    return out[:, None]
+
+
+__all__ = ["decode_attention"]

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the decode-attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k_cache, v_cache, pos: int, window: int | None = None):
+    """q: (B, Hq, D); caches: (B, S, Hkv, D).  Returns (B, Hq, D)."""
+    B, Hq, D = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    group = Hq // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Hkv, group, D) * (D ** -0.5)
+    s = jnp.einsum("bhgd,bshd->bhgs", qf, k_cache.astype(jnp.float32))
+    k_pos = jnp.arange(S)
+    valid = k_pos < pos
+    if window is not None and window > 0:
+        valid &= k_pos >= pos - window
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", w, v_cache.astype(jnp.float32))
+    return o.reshape(B, Hq, D).astype(q.dtype)

@@ -1,0 +1,45 @@
+"""Jit-ready wrappers around the flash-attention Pallas kernel.
+
+Model layers pass (B, S, H, D) activations; the kernel wants (B, H, S, D).
+On CPU backends the kernel runs in interpret mode (same code path, Python
+emulation) -- that is how the per-kernel allclose tests execute here.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
+                    block_q: int = 512, block_k: int = 512):
+    """q/k/v: (B, S, H{q,kv}, D) -> (B, S, Hq, D).  Static window."""
+    w = jnp.array([window if window else -1], jnp.int32)
+    out = flash_attention_fwd(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+        w, causal=causal, block_q=block_q, block_k=block_k, interpret=_interpret())
+    return out.transpose(0, 2, 1, 3)
+
+
+def flash_attention_dyn(q, k, v, window, *, block_q: int = 512, block_k: int = 512):
+    """Traced-window variant used inside ``lax.scan`` over heterogeneous layers.
+
+    q/k/v: (B, S, H, D); window: scalar int32 (<=0 = full causal).
+    """
+    w = jnp.reshape(window, (1,)).astype(jnp.int32)
+    out = flash_attention_fwd(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+        w, causal=True, block_q=min(block_q, q.shape[1]),
+        block_k=min(block_k, q.shape[1]), interpret=_interpret())
+    return out.transpose(0, 2, 1, 3)
+
+
+__all__ = ["flash_attention", "flash_attention_dyn"]

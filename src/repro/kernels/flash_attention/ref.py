@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, window: int | None, *, causal: bool = True):
+    """q: (B, Hq, S, D); k/v: (B, Hkv, S, D).  Returns (B, Hq, S, D)."""
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    group = Hq // Hkv
+    qf = q.astype(jnp.float32) * (D ** -0.5)
+    qf = qf.reshape(B, Hkv, group, S, D)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, k.astype(jnp.float32))
+    q_pos = jnp.arange(S)[:, None]
+    k_pos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None and window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", w, v.astype(jnp.float32))
+    return o.reshape(B, Hq, S, D).astype(q.dtype)

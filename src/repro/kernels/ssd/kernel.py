@@ -1,0 +1,61 @@
+"""Mamba-2 SSD intra-chunk kernel (Pallas TPU).
+
+The intra-chunk term of the SSD duality is, per (batch, chunk, head):
+
+    scores = C B^T                (q x n @ n x q  -> MXU)
+    L      = tril(exp(acs_t - acs_u))
+    y      = (scores * L) @ x     (q x q @ q x p  -> MXU)
+
+which is three MXU ops + a VPU mask per grid cell -- exactly the shape of work
+the TPU wants, replacing the CUDA selective-scan's warp shuffles.  Grid:
+(batch * n_chunks, heads); all operands for one (chunk, head) fit easily in
+VMEM (chunk<=256, state n<=128, head dim p<=64 => < 1 MB).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(x_ref, acs_ref, b_ref, c_ref, o_ref):
+    x = x_ref[0, :, 0].astype(jnp.float32)        # (q, p)
+    acs = acs_ref[0, :, 0].astype(jnp.float32)    # (q,)
+    B = b_ref[0, :, 0].astype(jnp.float32)        # (q, n)
+    C = c_ref[0, :, 0].astype(jnp.float32)        # (q, n)
+    q = x.shape[0]
+    scores = C @ B.T                              # (q, q)
+    t = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    u = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    L = jnp.where(t >= u, jnp.exp(acs[:, None] - acs[None, :]), 0.0)
+    y = (scores * L) @ x                          # (q, p)
+    o_ref[0, :, 0] = y.astype(o_ref.dtype)
+
+
+def ssd_intra_fwd(xb, acs, Bh, Ch, *, interpret: bool = False):
+    """Intra-chunk SSD.
+
+    xb:  (bc, q, h, p) fp32   (batch*chunks flattened)
+    acs: (bc, q, h)    fp32   cumulative log-decay within chunk
+    Bh:  (bc, q, h, n) fp32
+    Ch:  (bc, q, h, n) fp32
+    Returns y_intra: (bc, q, h, p) fp32.
+    """
+    bc, q, h, p = xb.shape
+    n = Bh.shape[-1]
+    grid = (bc, h)
+    return pl.pallas_call(
+        functools.partial(_ssd_kernel),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q, 1, p), lambda b, hh: (b, 0, hh, 0)),
+            pl.BlockSpec((1, q, 1), lambda b, hh: (b, 0, hh)),
+            pl.BlockSpec((1, q, 1, n), lambda b, hh: (b, 0, hh, 0)),
+            pl.BlockSpec((1, q, 1, n), lambda b, hh: (b, 0, hh, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q, 1, p), lambda b, hh: (b, 0, hh, 0)),
+        out_shape=jax.ShapeDtypeStruct((bc, q, h, p), jnp.float32),
+        interpret=interpret,
+    )(xb, acs, Bh, Ch)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the SSD intra-chunk kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ssd_intra_ref(xb, acs, Bh, Ch):
+    """xb: (bc,q,h,p); acs: (bc,q,h); Bh/Ch: (bc,q,h,n) -> (bc,q,h,p) fp32."""
+    q = xb.shape[1]
+    diff = acs[:, :, None, :] - acs[:, None, :, :]          # (bc,t,u,h)
+    tri = jnp.tril(jnp.ones((q, q), dtype=bool))
+    L = jnp.where(tri[None, :, :, None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bthn,buhn->btuh", Ch, Bh)
+    return jnp.einsum("btuh,btuh,buhp->bthp", scores, L, xb.astype(jnp.float32))

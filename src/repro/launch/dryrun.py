@@ -1,0 +1,191 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("DRYRUN_XLA_FLAGS",
+                                         "--xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this:
+  1. builds the production mesh (16x16 single-pod or 2x16x16 multi-pod),
+  2. constructs the step function implied by the shape (train_step for
+     ``train_*``, prefill for ``prefill_*``, serve decode for ``decode_*``),
+  3. jits it with explicit in/out shardings, lowers with ShapeDtypeStruct
+     inputs (no allocation), compiles,
+  4. records memory_analysis / cost_analysis / collective bytes to JSONL.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m --shape train_4k \
+      --mesh single --out results/dryrun.jsonl
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES, get_config, input_specs, shape_supported
+from repro.distributed.hlo_analysis import collective_stats, roofline_terms
+from repro.distributed.sharding import batch_sharding, cache_sharding, param_sharding
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.models.common import ModelConfig
+from repro.optim.adamw import AdamWConfig, adamw_init
+from repro.training.train_step import make_train_step
+
+
+def _abstract(tree):
+    return jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree)
+
+
+def build_cell(arch: str, shape: str, mesh, cfg_override=None):
+    """Returns (jitted_fn, example_args_abstract) for the cell."""
+    from repro.distributed import moe_ep
+    moe_ep.set_ep_mesh(mesh)
+    cfg = cfg_override or get_config(arch)
+    model = build_model(cfg)
+    sp = SHAPES[shape]
+    specs = input_specs(cfg, shape)
+    p_abs = model.abstract_params()
+    p_sh = param_sharding(p_abs, mesh)
+
+    if sp.kind == "train":
+        opt_cfg = AdamWConfig()
+        step = make_train_step(model, opt_cfg)
+        o_abs = jax.eval_shape(adamw_init, p_abs)
+        o_sh = param_sharding(o_abs, mesh)
+        b_sh = batch_sharding(specs, mesh)
+        fn = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                     out_shardings=(p_sh, o_sh, None),
+                     donate_argnums=(0, 1))
+        args = (p_abs, o_abs, specs)
+    elif sp.kind == "prefill":
+        def prefill_fn(params, batch):
+            return model.prefill(params, batch, max_len=sp.seq_len)
+        c_abs = jax.eval_shape(lambda: model.init_cache(sp.global_batch, sp.seq_len))
+        c_sh = cache_sharding(c_abs, cfg, mesh)
+        b_sh = batch_sharding(specs, mesh)
+        fn = jax.jit(prefill_fn, in_shardings=(p_sh, b_sh),
+                     out_shardings=(None, c_sh))
+        args = (p_abs, specs)
+    else:  # decode
+        c_abs = jax.eval_shape(lambda: model.init_cache(sp.global_batch, sp.seq_len))
+        c_sh = cache_sharding(c_abs, cfg, mesh)
+
+        def serve_step(params, cache, token, pos):
+            return model.decode_step(params, cache, token, pos)
+
+        b_sh = batch_sharding(specs, mesh)
+        fn = jax.jit(serve_step,
+                     in_shardings=(p_sh, c_sh, b_sh["token"], None),
+                     out_shardings=(None, c_sh),
+                     donate_argnums=(1,))
+        args = (p_abs, c_abs, specs["token"],
+                jax.ShapeDtypeStruct((), jnp.int32))
+    return fn, args
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, *, keep_hlo: bool = False) -> dict:
+    cfg = get_config(arch)
+    ok, why = shape_supported(cfg, shape)
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_kind}
+    if not ok:
+        rec.update(status="skipped", reason=why, wall_s=0.0)
+        return rec
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+        with mesh:
+            fn, args = build_cell(arch, shape, mesh)
+            lowered = fn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            try:
+                mem = compiled.memory_analysis()
+                mem_d = {
+                    "bytes_per_device": getattr(mem, "temp_size_in_bytes", None),
+                    "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                    "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                    "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+                } if mem is not None else None
+            except Exception as e:
+                mem_d = {"error": repr(e)}
+            try:
+                cost = compiled.cost_analysis()
+                cost_d = {k: cost.get(k) for k in
+                          ("flops", "bytes accessed", "optimal_seconds")
+                          if cost and k in cost}
+            except Exception as e:
+                cost, cost_d = None, {"error": repr(e)}
+            hlo = compiled.as_text()
+            coll = collective_stats(hlo)
+            n_dev = mesh.size
+            flops = (cost or {}).get("flops", 0.0) or 0.0
+            hbm = (cost or {}).get("bytes accessed", 0.0) or 0.0
+            terms = roofline_terms(flops, hbm, coll.total_bytes / n_dev)
+            rec.update(
+                status="ok",
+                devices=n_dev,
+                lower_s=round(t_lower, 1),
+                compile_s=round(t_compile, 1),
+                memory=mem_d,
+                cost=cost_d,
+                collectives=coll.as_dict(),
+                roofline=terms,
+            )
+            if keep_hlo:
+                rec["hlo_len"] = len(hlo)
+    except Exception as e:
+        rec.update(status="error", error=repr(e),
+                   traceback=traceback.format_exc()[-2000:])
+    rec["wall_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    args = ap.parse_args()
+
+    cells = []
+    archs = ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    for a in archs:
+        for s in shapes:
+            for mk in meshes:
+                cells.append((a, s, mk))
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    done = set()
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    if r.get("status") in ("ok", "skipped"):
+                        done.add((r["arch"], r["shape"], r["mesh"]))
+                except Exception:
+                    pass
+
+    with open(args.out, "a") as f:
+        for a, s, mk in cells:
+            if (a, s, mk) in done:
+                print(f"[skip-done] {a} {s} {mk}", flush=True)
+                continue
+            print(f"[cell] {a} {s} {mk} ...", flush=True)
+            rec = run_cell(a, s, mk)
+            f.write(json.dumps(rec) + "\n")
+            f.flush()
+            print(f"  -> {rec['status']} wall={rec.get('wall_s', 0)}s "
+                  f"{rec.get('error', '')[:200]}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

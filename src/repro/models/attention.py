@@ -1,0 +1,86 @@
+"""Multi-head attention (GQA / causal / sliding-window / cross) in pure JAX.
+
+The jnp path here is also the oracle for the Pallas kernels in
+``repro.kernels``; ``use_kernel`` switches the prefill path to the Pallas
+flash-attention kernel (interpret-mode on CPU, compiled on TPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_mask(q_len: int, kv_len: int, *, causal: bool, window: int | None,
+                   q_offset: int | jax.Array = 0) -> jax.Array:
+    """(q_len, kv_len) boolean mask; True = attend.
+
+    ``q_offset``: absolute position of query row 0 (for decode / chunked prefill).
+    """
+    q_pos = jnp.arange(q_len)[:, None] + q_offset
+    k_pos = jnp.arange(kv_len)[None, :]
+    m = jnp.ones((q_len, kv_len), dtype=bool)
+    if causal:
+        m &= k_pos <= q_pos
+    if window is not None:
+        m &= k_pos > q_pos - window
+    return m
+
+
+def sdpa(q: jax.Array, k: jax.Array, v: jax.Array, mask: jax.Array | None,
+         *, kv_valid_len: jax.Array | None = None) -> jax.Array:
+    """Scaled dot-product attention with GQA head-group broadcasting.
+
+    q: (B, Sq, Hq, D); k/v: (B, Sk, Hkv, D); mask: (Sq, Sk) or None.
+    ``kv_valid_len``: optional scalar/per-batch count of valid KV entries
+    (decode with a partially-filled cache).
+    """
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    group = Hq // Hkv
+    qf = q.astype(jnp.float32) * (D ** -0.5)
+    qf = qf.reshape(B, Sq, Hkv, group, D)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k.astype(jnp.float32))
+    if mask is not None:
+        if mask.ndim == 3:      # per-batch mask (B, Sq, Sk)
+            logits = jnp.where(mask[:, None, None], logits, NEG_INF)
+        else:
+            logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    if kv_valid_len is not None:
+        k_pos = jnp.arange(k.shape[1])
+        valid = k_pos[None] < jnp.reshape(kv_valid_len, (-1, 1))   # (B, Sk)
+        logits = jnp.where(valid[:, None, None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v.astype(jnp.float32))
+    return out.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+def mha_prefill(q, k, v, *, causal: bool = True, window: int | None = None,
+                use_kernel: bool = False) -> jax.Array:
+    """Full-sequence attention.  q/k/v: (B, S, H{q,kv}, D)."""
+    if use_kernel:
+        from repro.kernels.flash_attention.ops import flash_attention
+        return flash_attention(q, k, v, causal=causal, window=window)
+    mask = attention_mask(q.shape[1], k.shape[1], causal=causal, window=window)
+    return sdpa(q, k, v, mask)
+
+
+def mha_decode(q1, k_cache, v_cache, pos, *, window: int | None = None,
+               use_kernel: bool = False) -> jax.Array:
+    """One-token decode: q1 (B, 1, Hq, D) against caches (B, S_max, Hkv, D);
+    ``pos`` = number of valid entries (the new token's KV must already be
+    written at index pos-1)."""
+    if use_kernel:
+        from repro.kernels.decode_attention.ops import decode_attention
+        return decode_attention(q1, k_cache, v_cache, pos, window=window)
+    S = k_cache.shape[1]
+    k_pos = jnp.arange(S)
+    valid = k_pos < pos
+    if window is not None:
+        valid &= k_pos >= pos - window
+    mask = valid[None, :]                    # (1, S) -> (Sq=1, Sk)
+    return sdpa(q1, k_cache, v_cache, mask)
+
+
+__all__ = ["attention_mask", "sdpa", "mha_prefill", "mha_decode", "NEG_INF"]

@@ -1,0 +1,185 @@
+"""Shared model configuration + primitive layers (pure JAX, shard-friendly).
+
+Every architecture in the zoo is described by one :class:`ModelConfig`; the
+builders in `repro.models.registry` turn a config into a :class:`Model` bundle of
+pure functions (init / train logits / prefill / decode_step) suitable for
+``jax.jit`` with explicit shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int                 # per-expert FFN hidden size
+    capacity_factor: float = 1.25
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    d_state: int
+    head_dim: int = 64
+    n_groups: int = 1
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 256              # SSD chunk length
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # dense | moe | ssm | hybrid | encdec | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int = 0              # 0 => attention-free
+    n_kv_heads: int = 0
+    d_ff: int = 0
+    vocab: int = 32000
+    head_dim: int = 0             # 0 => d_model // n_heads
+    rope_theta: float = 10_000.0
+    qkv_bias: bool = False
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    # sliding-window / local-global interleave
+    window: int | None = None             # SWA width for windowed layers
+    global_every: int | None = None       # gemma3: 1 global layer every N (rest local)
+    # MoE / SSM
+    moe: MoEConfig | None = None
+    ssm: SSMConfig | None = None
+    # zamba2-style shared attention block applied every N ssm layers
+    shared_attn_every: int | None = None
+    # encoder-decoder (whisper): encoder length & layers
+    n_enc_layers: int = 0
+    enc_len: int = 0
+    # modality frontend stub: model consumes precomputed embeddings for the
+    # encoder/prefix instead of token ids
+    input_mode: str = "tokens"            # tokens | embeddings
+    dtype: Any = jnp.bfloat16
+    # remat policy for train_step: none | block | dots
+    remat: str = "block"
+    # KV cache storage: "native" (= dtype) or "int8" (per-token/head symmetric
+    # quantization; halves the decode memory term -- EXPERIMENTS SSPerf 4.3)
+    kv_cache_dtype: str = "native"
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.n_heads, 1)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this arch run the 500k-token long-context decode shape?"""
+        if self.family in ("ssm", "hybrid"):
+            return True
+        if self.window is not None or self.global_every is not None:
+            return True   # SWA / mostly-local attention
+        return False
+
+    def param_count(self) -> int:
+        """Analytic parameter count (for 6ND roofline math)."""
+        d, L = self.d_model, self.n_layers
+        hd = self.resolved_head_dim
+        total = self.vocab * d                       # embed
+        if not self.tie_embeddings:
+            total += self.vocab * d                  # lm head
+        per_attn = d * hd * self.n_heads + 2 * d * hd * self.n_kv_heads \
+            + hd * self.n_heads * d
+        if self.qkv_bias:
+            per_attn += hd * (self.n_heads + 2 * self.n_kv_heads)
+        per_mlp = 3 * d * self.d_ff if self.d_ff else 0
+        if self.moe:
+            per_mlp = d * self.moe.n_experts \
+                + self.moe.n_experts * 3 * d * self.moe.d_expert
+        if self.family == "ssm" or (self.family == "hybrid" and self.ssm):
+            s = self.ssm
+            d_in = s.expand * d
+            n_h = d_in // s.head_dim
+            per_ssm = d * (2 * d_in + 2 * s.n_groups * s.d_state + n_h) \
+                + d_in * d + s.conv_width * (d_in + 2 * s.n_groups * s.d_state) \
+                + 2 * n_h
+            if self.family == "ssm":
+                total += L * (per_ssm + 2 * d)
+                return int(total)
+            # hybrid: L ssm layers + ONE shared attn+mlp block
+            total += L * (per_ssm + 2 * d)
+            total += per_attn + per_mlp + 2 * d
+            return int(total)
+        n_blocks = L + self.n_enc_layers
+        per_block = per_attn + per_mlp + 2 * d
+        if self.n_enc_layers:   # decoder blocks also carry cross-attention
+            per_block_dec = per_attn * 2 + per_mlp + 3 * d
+            total += self.n_enc_layers * per_block + L * per_block_dec
+        else:
+            total += L * per_block
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Active parameters per token (MoE: only top-k experts count)."""
+        if not self.moe:
+            return self.param_count()
+        d, L = self.d_model, self.n_layers
+        full = self.param_count()
+        dense_experts = L * self.moe.n_experts * 3 * d * self.moe.d_expert
+        active_experts = L * self.moe.top_k * 3 * d * self.moe.d_expert
+        return int(full - dense_experts + active_experts)
+
+
+# ---------------------------------------------------------------------------------
+# primitive layers
+# ---------------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * gamma
+
+
+def rope_tables(positions: jax.Array, head_dim: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """cos/sin tables for rotary embedding: (..., head_dim/2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., seq, heads, head_dim); cos/sin: (..., seq, head_dim/2)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[..., :, None, :]
+    s = sin[..., :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+def gated_mlp(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    """SwiGLU feed-forward; weights (d, f), (d, f), (f, d)."""
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+def init_dense(rng: jax.Array, shape: tuple[int, ...], dtype, scale: float | None = None):
+    fan_in = shape[0] if len(shape) >= 2 else max(shape[0], 1)
+    std = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(rng, shape, dtype=jnp.float32) * std).astype(dtype)
+
+
+def split_keys(rng: jax.Array, n: int) -> list[jax.Array]:
+    return list(jax.random.split(rng, n))
+
+
+__all__ = [
+    "ModelConfig", "MoEConfig", "SSMConfig",
+    "rms_norm", "rope_tables", "apply_rope", "gated_mlp",
+    "init_dense", "split_keys",
+]

@@ -1,0 +1,400 @@
+"""Decoder-only LM supporting the dense / GQA / SWA / local-global / MoE variants
+of the zoo, built as pure functions over a scanned, stacked-parameter block stack.
+
+Key properties:
+* ``lax.scan`` over layers keeps HLO size O(1) in depth (fast 512-device compiles);
+* prefill attention streams over query chunks (blockwise softmax) above
+  ``STREAM_THRESHOLD`` so 32k-token prefill never materializes an (S, S) tensor;
+* decode uses a preallocated KV cache with position-masked single-token attention;
+* per-layer heterogeneity (local vs global attention) is expressed as a scanned
+  boolean so the stack stays homogeneous.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models.attention import mha_decode, sdpa
+from repro.models.common import (
+    ModelConfig, apply_rope, gated_mlp, init_dense, rms_norm, rope_tables,
+)
+from repro.models.moe import moe_ffn
+
+STREAM_THRESHOLD = 4096
+STREAM_CHUNK = 512
+
+
+# ---------------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------------
+
+def init_block_params(rng, cfg: ModelConfig):
+    """One transformer block; leaves later get a leading L dim via vmap."""
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    Hq, Hkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(rng, 10)
+    p = {
+        "ln1": jnp.ones((d,), cfg.dtype),
+        "ln2": jnp.ones((d,), cfg.dtype),
+        "wq": init_dense(ks[0], (d, Hq * hd), cfg.dtype),
+        "wk": init_dense(ks[1], (d, Hkv * hd), cfg.dtype),
+        "wv": init_dense(ks[2], (d, Hkv * hd), cfg.dtype),
+        "wo": init_dense(ks[3], (Hq * hd, d), cfg.dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((Hq * hd,), cfg.dtype)
+        p["bk"] = jnp.zeros((Hkv * hd,), cfg.dtype)
+        p["bv"] = jnp.zeros((Hkv * hd,), cfg.dtype)
+    if cfg.moe:
+        m = cfg.moe
+        p["moe"] = {
+            "router": init_dense(ks[4], (d, m.n_experts), jnp.float32),
+            "w_gate": init_dense(ks[5], (m.n_experts, d, m.d_expert), cfg.dtype),
+            "w_up": init_dense(ks[6], (m.n_experts, d, m.d_expert), cfg.dtype),
+            "w_down": init_dense(ks[7], (m.n_experts, m.d_expert, d), cfg.dtype,
+                                 scale=m.d_expert ** -0.5),
+        }
+    else:
+        p["mlp"] = {
+            "w_gate": init_dense(ks[4], (d, cfg.d_ff), cfg.dtype),
+            "w_up": init_dense(ks[5], (d, cfg.d_ff), cfg.dtype),
+            "w_down": init_dense(ks[6], (cfg.d_ff, d), cfg.dtype,
+                                 scale=cfg.d_ff ** -0.5),
+        }
+    return p
+
+
+def init_params(rng, cfg: ModelConfig):
+    k_embed, k_blocks, k_head = jax.random.split(rng, 3)
+    blocks = jax.vmap(lambda k: init_block_params(k, cfg))(
+        jax.random.split(k_blocks, cfg.n_layers))
+    params = {
+        "embed": init_dense(k_embed, (cfg.vocab, cfg.d_model), cfg.dtype, scale=0.02),
+        "blocks": blocks,
+        "ln_f": jnp.ones((cfg.d_model,), cfg.dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_dense(k_head, (cfg.d_model, cfg.vocab), cfg.dtype)
+    return params
+
+
+def layer_windows(cfg: ModelConfig) -> jnp.ndarray:
+    """(L,) int32: -1 = full/global attention, else SWA width for that layer."""
+    L = cfg.n_layers
+    if cfg.global_every:
+        w = cfg.window or 1024
+        return jnp.array(
+            [-1 if (i % cfg.global_every == cfg.global_every - 1) else w
+             for i in range(L)], dtype=jnp.int32)
+    if cfg.window:
+        return jnp.full((L,), cfg.window, dtype=jnp.int32)
+    return jnp.full((L,), -1, dtype=jnp.int32)
+
+
+# ---------------------------------------------------------------------------------
+# attention with streaming prefill
+# ---------------------------------------------------------------------------------
+
+def _stream_attention(q, k, v, window: jax.Array, q_offset: int = 0):
+    """Blockwise-softmax causal attention, O(S * chunk) memory.
+
+    q: (B, S, Hq, D); window: scalar int32 (-1 = unlimited).
+    """
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    group = Hq // Hkv
+    nq = S // STREAM_CHUNK
+    qc = q.reshape(B, nq, STREAM_CHUNK, Hq, D).transpose(1, 0, 2, 3, 4)
+
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    k_pos = jnp.arange(k.shape[1])
+
+    def chunk_fn(_, qi_i):
+        qi, i = qi_i
+        qf = qi.astype(jnp.float32) * (D ** -0.5)
+        qf = qf.reshape(B, STREAM_CHUNK, Hkv, group, D)
+        logits = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf)
+        q_pos = i * STREAM_CHUNK + jnp.arange(STREAM_CHUNK) + q_offset
+        m = k_pos[None, :] <= q_pos[:, None]
+        m &= jnp.where(window > 0, k_pos[None, :] > q_pos[:, None] - window, True)
+        logits = jnp.where(m[None, None, None], logits, attn_mod.NEG_INF)
+        w = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", w, vf)
+        return None, out.reshape(B, STREAM_CHUNK, Hq, D).astype(qi.dtype)
+
+    _, outs = jax.lax.scan(chunk_fn, None, (qc, jnp.arange(nq)))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, S, Hq, D)
+
+
+def _prefill_attention(q, k, v, window: jax.Array, use_kernel: bool):
+    S = q.shape[1]
+    if use_kernel:
+        from repro.kernels.flash_attention.ops import flash_attention_dyn
+        return flash_attention_dyn(q, k, v, window)
+    if S > STREAM_THRESHOLD and S % STREAM_CHUNK == 0:
+        return _stream_attention(q, k, v, window)
+    mask = attn_mod.attention_mask(S, S, causal=True, window=None)
+    k_pos = jnp.arange(S)
+    wmask = jnp.where(window > 0,
+                      k_pos[None, :] > k_pos[:, None] - window, True)
+    return sdpa(q, k, v, mask & wmask)
+
+
+# ---------------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------------
+
+def _project_qkv(x, bp, cfg: ModelConfig):
+    B, S, d = x.shape
+    hd = cfg.resolved_head_dim
+    q = x @ bp["wq"]
+    k = x @ bp["wk"]
+    v = x @ bp["wv"]
+    if cfg.qkv_bias:
+        q = q + bp["bq"]
+        k = k + bp["bk"]
+        v = v + bp["bv"]
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    k = k.reshape(B, S, cfg.n_kv_heads, hd)
+    v = v.reshape(B, S, cfg.n_kv_heads, hd)
+    return q, k, v
+
+
+def _ffn(h, bp, cfg: ModelConfig):
+    if cfg.moe:
+        import os
+        from repro.distributed import moe_ep
+        mesh = moe_ep.get_ep_mesh()
+        if mesh is not None and "model" in mesh.axis_names \
+                and os.environ.get("REPRO_MOE_EP", "1") == "1":
+            return moe_ep.moe_ffn_ep(h, bp["moe"], cfg.moe, mesh)
+        B, S, d = h.shape
+        out, aux = moe_ffn(h.reshape(B * S, d), bp["moe"], cfg.moe)
+        return out.reshape(B, S, d), aux
+    return gated_mlp(h, bp["mlp"]["w_gate"], bp["mlp"]["w_up"], bp["mlp"]["w_down"]), 0.0
+
+
+def block_forward(x, bp, window, cos, sin, cfg: ModelConfig, use_kernel: bool):
+    """Training / prefill block: x (B, S, d)."""
+    h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+    q, k, v = _project_qkv(h, bp, cfg)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    o = _prefill_attention(q, k, v, window, use_kernel)
+    x = x + o.reshape(*x.shape[:2], -1) @ bp["wo"]
+    h = rms_norm(x, bp["ln2"], cfg.norm_eps)
+    f, aux = _ffn(h, bp, cfg)
+    return x + f, (k, v), aux
+
+
+def block_decode(x, bp, window, cache_k, cache_v, pos, cos, sin, cfg: ModelConfig,
+                 cache_ks=None, cache_vs=None):
+    """One-token decode.  x: (B, 1, d); caches (B, S_max, Hkv, hd).
+
+    ``pos`` is a scalar (uniform batch) or an (B,) vector (continuous batching:
+    every slot carries its own write position / valid length).
+    ``cache_ks/vs``: per-token/head int8 scales when kv_cache_dtype == int8."""
+    int8_kv = cache_ks is not None
+    h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+    q, k, v = _project_qkv(h, bp, cfg)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    if int8_kv:
+        k_store, k_sc = _kv_quantize(k)
+        v_store, v_sc = _kv_quantize(v)
+    else:
+        k_store, v_store = k, v
+    S = cache_k.shape[1]
+    k_pos = jnp.arange(S)
+    if jnp.ndim(pos) == 1:
+        upd = lambda c, n: jax.vmap(
+            lambda cb, nb, pb: jax.lax.dynamic_update_slice(cb, nb.astype(cb.dtype),
+                                                            (pb, 0, 0)))(c, n, pos)
+        cache_k = upd(cache_k, k_store)
+        cache_v = upd(cache_v, v_store)
+        if int8_kv:
+            cache_ks = upd(cache_ks, k_sc)
+            cache_vs = upd(cache_vs, v_sc)
+        valid = k_pos[None, :] < pos[:, None] + 1                   # (B, S)
+        valid &= jnp.where(window > 0, k_pos[None, :] > pos[:, None] - window, True)
+        mask = valid[:, None, :]                                    # (B, Sq=1, S)
+    else:
+        upd = lambda c, n: jax.lax.dynamic_update_slice(
+            c, n.astype(c.dtype), (0, pos, 0, 0))
+        cache_k = upd(cache_k, k_store)
+        cache_v = upd(cache_v, v_store)
+        if int8_kv:
+            cache_ks = upd(cache_ks, k_sc)
+            cache_vs = upd(cache_vs, v_sc)
+        valid = k_pos < pos + 1
+        valid &= jnp.where(window > 0, k_pos > pos - window, True)
+        mask = valid[None, :]
+    if int8_kv:
+        k_eff = _kv_dequantize(cache_k, cache_ks, cfg.dtype)
+        v_eff = _kv_dequantize(cache_v, cache_vs, cfg.dtype)
+    else:
+        k_eff, v_eff = cache_k, cache_v
+    o = sdpa(q, k_eff, v_eff, mask)
+    x = x + o.reshape(*x.shape[:2], -1) @ bp["wo"]
+    h = rms_norm(x, bp["ln2"], cfg.norm_eps)
+    f, _ = _ffn(h, bp, cfg)
+    return x + f, (cache_k, cache_v, cache_ks, cache_vs)
+
+
+# ---------------------------------------------------------------------------------
+# model-level functions
+# ---------------------------------------------------------------------------------
+
+def _embed_in(params, batch, cfg: ModelConfig):
+    if cfg.input_mode == "embeddings":
+        return batch["embeds"].astype(cfg.dtype)
+    return params["embed"][batch["tokens"]]
+
+
+def _lm_head(params, h, cfg: ModelConfig):
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return (h @ w).astype(jnp.float32)
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        pol = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)
+
+
+def forward(params, batch, cfg: ModelConfig, *, use_kernel: bool = False):
+    """Full-sequence forward -> (logits (B,S,V) f32, aux)."""
+    x = _embed_in(params, batch, cfg)
+    B, S, _ = x.shape
+    cos, sin = rope_tables(jnp.arange(S), cfg.resolved_head_dim, cfg.rope_theta)
+    windows = layer_windows(cfg)
+
+    def body(x, layer):
+        bp, w = layer
+        x, _, aux = block_forward(x, bp, w, cos, sin, cfg, use_kernel)
+        return x, aux
+
+    body = _remat(body, cfg)
+    x, auxs = jax.lax.scan(body, x, (params["blocks"], windows))
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return _lm_head(params, x, cfg), jnp.sum(auxs)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, use_kernel: bool = False):
+    logits, aux = forward(params, batch, cfg, use_kernel=use_kernel)
+    tgt = batch["targets"]
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    ll = jnp.take_along_axis(logp, tgt[:, 1:, None], axis=-1)[..., 0]
+    mask = (tgt[:, 1:] >= 0).astype(jnp.float32)
+    loss = -(ll * mask).sum() / jnp.clip(mask.sum(), 1.0)
+    return loss + 0.01 * aux, {"ce": loss, "aux": aux}
+
+
+def _kv_quantize(x):
+    """x: (..., hd) -> (int8 values, f32 scale over the last dim)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _kv_dequantize(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    hd = cfg.resolved_head_dim
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, hd)
+    if cfg.kv_cache_dtype == "int8":
+        sshape = shape[:-1] + (1,)
+        return {
+            "k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "k_scale": jnp.zeros(sshape, jnp.float32),
+            "v_scale": jnp.zeros(sshape, jnp.float32),
+        }
+    return {
+        "k": jnp.zeros(shape, cfg.dtype),
+        "v": jnp.zeros(shape, cfg.dtype),
+    }
+
+
+def prefill(params, batch, cfg: ModelConfig, max_len: int | None = None,
+            *, use_kernel: bool = False):
+    """Run the prompt, return (last-position logits, cache dict)."""
+    x = _embed_in(params, batch, cfg)
+    B, S, _ = x.shape
+    max_len = max_len or S
+    cos, sin = rope_tables(jnp.arange(S), cfg.resolved_head_dim, cfg.rope_theta)
+    windows = layer_windows(cfg)
+
+    def body(x, layer):
+        bp, w = layer
+        x, (k, v), _ = block_forward(x, bp, w, cos, sin, cfg, use_kernel)
+        return x, (k, v)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"], windows))
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = _lm_head(params, x[:, -1:], cfg)
+    if max_len > S:
+        pad = ((0, 0), (0, 0), (0, max_len - S), (0, 0), (0, 0))
+        ks = jnp.pad(ks, pad)
+        vs = jnp.pad(vs, pad)
+    if cfg.kv_cache_dtype == "int8":
+        kq, ksc = _kv_quantize(ks)
+        vq, vsc = _kv_quantize(vs)
+        return logits, {"k": kq, "v": vq, "k_scale": ksc, "v_scale": vsc}
+    return logits, {"k": ks.astype(cfg.dtype), "v": vs.astype(cfg.dtype)}
+
+
+def decode_step(params, cache, token, pos, cfg: ModelConfig):
+    """token: (B, 1) int32 (or (B,1,d) embeds); pos: scalar int32 count of cached
+    tokens.  Returns (logits (B,1,V), new cache)."""
+    if cfg.input_mode == "embeddings" and token.ndim == 3:
+        x = token.astype(cfg.dtype)
+    else:
+        x = params["embed"][token]
+    if jnp.ndim(pos) == 1:
+        cos, sin = rope_tables(pos[:, None], cfg.resolved_head_dim, cfg.rope_theta)
+    else:
+        cos, sin = rope_tables(jnp.array([pos]), cfg.resolved_head_dim, cfg.rope_theta)
+    windows = layer_windows(cfg)
+
+    int8_kv = cfg.kv_cache_dtype == "int8"
+
+    def body(x, layer):
+        if int8_kv:
+            bp, w, ck, cv, cks, cvs = layer
+        else:
+            bp, w, ck, cv = layer
+            cks = cvs = None
+        x, (ck, cv, cks, cvs) = block_decode(x, bp, w, ck, cv, pos, cos, sin, cfg,
+                                             cache_ks=cks, cache_vs=cvs)
+        return x, ((ck, cv, cks, cvs) if int8_kv else (ck, cv))
+
+    if int8_kv:
+        x, (ks, vs, kss, vss) = jax.lax.scan(
+            body, x, (params["blocks"], windows, cache["k"], cache["v"],
+                      cache["k_scale"], cache["v_scale"]))
+        new_cache = {"k": ks, "v": vs, "k_scale": kss, "v_scale": vss}
+    else:
+        x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"], windows,
+                                             cache["k"], cache["v"]))
+        new_cache = {"k": ks, "v": vs}
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return _lm_head(params, x, cfg), new_cache
+
+
+__all__ = [
+    "init_params", "forward", "loss_fn", "prefill", "decode_step", "init_cache",
+    "layer_windows", "block_forward", "block_decode",
+]

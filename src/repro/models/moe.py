@@ -1,0 +1,105 @@
+"""Mixture-of-Experts layer: top-k routing with capacity-bounded sort-based
+dispatch (GShard-style dropping), TPU/SPMD-friendly.
+
+The dispatch avoids the O(T*E*C) one-hot tensors of the classic einsum
+formulation: tokens' (token, expert) assignments are sorted by expert id, the
+rank within each expert group is computed from the sorted run starts, and
+tokens beyond the expert capacity are dropped (their combine weight is zero, so
+the residual path carries them -- standard dropping semantics).
+
+Under pjit, experts are sharded on the "model" axis ((E, D, F) with E sharded);
+XLA inserts the token all-to-alls.  The hillclimbed shard_map variant lives in
+``repro.distributed.moe_ep``.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import MoEConfig
+
+# hillclimb knob (EXPERIMENTS SSPerf): explicit sharding constraints on the
+# dispatch buffers keep the expert computation expert-sharded and the token
+# views data-sharded, steering SPMD to all-to-alls instead of full-buffer
+# all-reduces.  On by default; set REPRO_MOE_CONSTRAIN=0 for the baseline.
+_CONSTRAIN = os.environ.get("REPRO_MOE_CONSTRAIN", "1") == "1"
+
+
+def _constrain(x, spec):
+    if not _CONSTRAIN:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x   # no mesh context (single-device tests)
+
+
+def router_topk(x: jax.Array, w_router: jax.Array, cfg: MoEConfig):
+    """x: (T, D) -> (weights (T,k), experts (T,k), router logits for aux loss)."""
+    logits = (x.astype(jnp.float32) @ w_router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, experts = jax.lax.top_k(probs, cfg.top_k)
+    weights = weights / jnp.clip(weights.sum(-1, keepdims=True), 1e-9)
+    return weights, experts, logits
+
+
+def load_balance_loss(router_logits: jax.Array, experts: jax.Array, n_experts: int) -> jax.Array:
+    """Switch-Transformer aux loss: E * sum_e f_e * p_e."""
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    p_mean = probs.mean(0)
+    occupancy = jax.nn.one_hot(experts[:, 0], n_experts, dtype=jnp.float32).mean(0)
+    return n_experts * jnp.sum(occupancy * p_mean)
+
+
+def moe_ffn(x: jax.Array, params: dict, cfg: MoEConfig):
+    """x: (T, D).  params: router (D,E), w_gate/w_up (E,D,F), w_down (E,F,D).
+
+    Returns (out (T, D), aux_loss scalar).
+    """
+    T, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    # capacity floor of 4 keeps tiny decode batches drop-free; training shapes are
+    # governed by capacity_factor as usual
+    C = max(int(T * k * cfg.capacity_factor / E), min(4, T * k))
+
+    weights, experts, logits = router_topk(x, params["router"], cfg)
+
+    # ---- flatten (token, choice) pairs and sort by expert ---------------------------
+    flat_e = experts.reshape(-1)                      # (T*k,)
+    flat_w = weights.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(T), k)
+    order = jnp.argsort(flat_e, stable=True)
+    se, sw, st = flat_e[order], flat_w[order], flat_t[order]
+    # rank within expert group = position - index of first element of that expert
+    starts = jnp.searchsorted(se, jnp.arange(E), side="left")
+    rank = jnp.arange(T * k) - starts[se]
+    keep = rank < C                                   # capacity dropping
+
+    # ---- dispatch: build (E, C, D) expert inputs ------------------------------------
+    buf = jnp.zeros((E, C, D), dtype=x.dtype)
+    e_idx = jnp.where(keep, se, 0)
+    c_idx = jnp.where(keep, rank, 0)
+    src = jnp.where(keep[:, None], x[st], 0.0).astype(x.dtype)
+    buf = buf.at[e_idx, c_idx].add(src, mode="drop")
+    buf = _constrain(buf, P("model", None, None))
+
+    # ---- expert FFN (batched over E; sharded on the model axis under pjit) ----------
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, params["w_gate"])) \
+        * jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
+    h = _constrain(h, P("model", None, None))
+    y = jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+    y = _constrain(y, P("model", None, None))
+
+    # ---- combine ---------------------------------------------------------------------
+    gathered = y[e_idx, c_idx]                        # (T*k, D)
+    gathered = jnp.where(keep[:, None], gathered, 0.0)
+    out = jnp.zeros((T, D), dtype=jnp.float32)
+    out = out.at[st].add(gathered.astype(jnp.float32) * sw[:, None])
+    aux = load_balance_loss(logits, experts, E)
+    return out.astype(x.dtype), aux
+
+
+__all__ = ["moe_ffn", "router_topk", "load_balance_loss"]

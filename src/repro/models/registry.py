@@ -1,0 +1,51 @@
+"""Model bundle: uniform functional interface over the zoo's families."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+
+
+@dataclass(frozen=True)
+class Model:
+    """Pure-function bundle; everything is jit/pjit-able with explicit shardings."""
+
+    cfg: ModelConfig
+    init_params: Callable          # rng -> params
+    forward: Callable              # (params, batch) -> (logits, aux)
+    loss_fn: Callable              # (params, batch) -> (loss, metrics)
+    prefill: Callable              # (params, batch, max_len) -> (logits, cache)
+    decode_step: Callable          # (params, cache, token, pos) -> (logits, cache)
+    init_cache: Callable           # (batch, max_len) -> cache
+
+    def abstract_params(self):
+        return jax.eval_shape(self.init_params, jax.random.key(0))
+
+
+def build_model(cfg: ModelConfig, *, use_kernel: bool = False) -> Model:
+    if cfg.family in ("dense", "moe", "vlm"):
+        from repro.models import lm as mod
+    elif cfg.family in ("ssm", "hybrid"):
+        from repro.models import mamba_lm as mod
+    elif cfg.family in ("audio", "encdec"):
+        from repro.models import whisper as mod
+    else:
+        raise ValueError(f"unknown family {cfg.family}")
+
+    return Model(
+        cfg=cfg,
+        init_params=partial(mod.init_params, cfg=cfg),
+        forward=partial(mod.forward, cfg=cfg, use_kernel=use_kernel),
+        loss_fn=partial(mod.loss_fn, cfg=cfg, use_kernel=use_kernel),
+        prefill=partial(mod.prefill, cfg=cfg, use_kernel=use_kernel),
+        decode_step=partial(mod.decode_step, cfg=cfg),
+        init_cache=partial(mod.init_cache, cfg),
+    )
+
+
+__all__ = ["Model", "build_model"]

@@ -1,0 +1,185 @@
+"""Mamba-2 SSD (state-space duality) block, chunked matmul formulation.
+
+TPU adaptation of the CUDA selective scan: instead of warp-level scans, the
+sequence is split into chunks of length Q and the recurrence is expressed as
+dense matmuls (MXU work) + a short ``lax.scan`` over chunk states:
+
+  intra-chunk:  Y_intra = ((C B^T) .* decay_mask) X
+  chunk state:  S_i     = sum_t a(t->end) B_t x_t
+  inter-chunk:  S       = scan over chunks (decay^Q carry)
+  inter out:    Y_inter = C_t a(start->t) S_{i-1}
+
+This mirrors the official SSD "chunked" algorithm (arXiv:2405.21060 SS6).
+The Pallas kernel in ``repro.kernels.ssd`` fuses the intra-chunk part; this
+module is the pure-jnp reference and the default path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import SSMConfig
+
+
+def ssd_chunked(x, dt, A, B, C, D, chunk: int, *, use_kernel: bool = False,
+                initial_state=None, return_state: bool = False):
+    """SSD scan.
+
+    x:  (b, s, h, p)   inputs per head
+    dt: (b, s, h)      softplus-activated step sizes (>0)
+    A:  (h,)           negative decay rates
+    B:  (b, s, g, n)   input projections (state dim n, g groups)
+    C:  (b, s, g, n)   output projections
+    D:  (h,)           skip
+    Returns y: (b, s, h, p) (+ final state (b, h, p, n) if requested).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    s_orig = s
+    if s % chunk:
+        padlen = chunk - s % chunk
+        pad = lambda a: jnp.pad(a, [(0, 0), (0, padlen)] + [(0, 0)] * (a.ndim - 2))
+        x, dt, B, C = pad(x), pad(dt), pad(B), pad(C)   # dt=0 rows are identity steps
+        s = s + padlen
+    nc = s // chunk
+    rep = h // g
+
+    # fold dt into x and decay
+    xb = (x * dt[..., None]).astype(jnp.float32)                 # (b,s,h,p)
+    a = A[None, None, :] * dt                                    # (b,s,h)  negative
+    xb = xb.reshape(b, nc, chunk, h, p)
+    a = a.reshape(b, nc, chunk, h)
+    Bq = B.reshape(b, nc, chunk, g, n).astype(jnp.float32)
+    Cq = C.reshape(b, nc, chunk, g, n).astype(jnp.float32)
+    Bh = jnp.repeat(Bq, rep, axis=3)                             # (b,nc,q,h,n)
+    Ch = jnp.repeat(Cq, rep, axis=3)
+
+    # cumulative log-decay within chunk
+    acs = jnp.cumsum(a, axis=2)                                  # (b,nc,q,h)
+
+    # ---- intra-chunk (quadratic in chunk length; the Pallas kernel target) ----------
+    if use_kernel:
+        from repro.kernels.ssd.ops import ssd_intra
+        y_intra = ssd_intra(xb, acs, Bh, Ch)
+    else:
+        # L[t,u] = exp(acs_t - acs_u) for t >= u
+        diff = acs[:, :, :, None, :] - acs[:, :, None, :, :]     # (b,nc,t,u,h)
+        tri = jnp.tril(jnp.ones((chunk, chunk), dtype=bool))
+        Lmask = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+        scores = jnp.einsum("bcthn,bcuhn->bctuh", Ch, Bh)
+        y_intra = jnp.einsum("bctuh,bctuh,bcuhp->bcthp", scores, Lmask, xb)
+
+    # ---- chunk states ----------------------------------------------------------------
+    seg = jnp.exp(acs[:, :, -1:, :] - acs)                       # decay t -> chunk end
+    states = jnp.einsum("bcqhn,bcqh,bcqhp->bchpn", Bh, seg, xb)  # (b,nc,h,p,n)
+    chunk_decay = jnp.exp(acs[:, :, -1, :])                      # (b,nc,h)
+
+    # ---- inter-chunk recurrence (short scan over nc) ---------------------------------
+    def step(carry, inp):
+        st, dec = inp                                            # (b,h,p,n), (b,h)
+        new = carry * dec[..., None, None] + st
+        return new, carry                                        # emit the *incoming* state
+
+    init = jnp.zeros((b, h, p, n), jnp.float32) if initial_state is None \
+        else initial_state.astype(jnp.float32)
+    final, prev_states = jax.lax.scan(
+        step,
+        init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)           # (b,nc,h,p,n)
+
+    # ---- inter-chunk output ------------------------------------------------------------
+    dec_in = jnp.exp(acs)                                        # decay start -> t
+    y_inter = jnp.einsum("bcqhn,bcqh,bchpn->bcqhp", Ch, dec_in, prev_states)
+
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    y = y + x.astype(jnp.float32) * D[None, None, :, None]
+    y = y[:, :s_orig].astype(x.dtype)
+    if return_state:
+        return y, final
+    return y
+
+
+def ssd_decode_step(x1, dt1, A, B1, C1, D, state):
+    """Single-token recurrent update.
+
+    x1: (b, h, p); dt1: (b, h); B1/C1: (b, g, n); state: (b, h, p, n).
+    Returns (y (b,h,p), new_state).
+    """
+    b, h, p = x1.shape
+    g, n = B1.shape[1], B1.shape[2]
+    rep = h // g
+    Bh = jnp.repeat(B1, rep, axis=1).astype(jnp.float32)         # (b,h,n)
+    Ch = jnp.repeat(C1, rep, axis=1).astype(jnp.float32)
+    a = jnp.exp(A[None] * dt1)                                   # (b,h)
+    xd = (x1 * dt1[..., None]).astype(jnp.float32)
+    new_state = state * a[..., None, None] + xd[..., None] * Bh[:, :, None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch)
+    y = y + x1.astype(jnp.float32) * D[None, :, None]
+    return y.astype(x1.dtype), new_state
+
+
+def mamba2_block(x, params, cfg: SSMConfig, *, use_kernel: bool = False,
+                 state=None, conv_state=None, decode: bool = False):
+    """Full Mamba-2 mixer.
+
+    x: (b, s, d).  params: w_z/w_x (d, d_in), w_bc (d, 2*g*n), w_dt (d, h),
+    conv_x (w, d_in), conv_bc (w, 2*g*n), A_log (h,), D (h,), dt_bias (h,),
+    norm (d_in,), out_proj (d_in, d).
+
+    In decode mode s == 1 and (state, conv_state) carry the recurrence;
+    returns (y, new_state, new_conv_state).  conv_state: (b, w, d_in + 2*g*n).
+    """
+    b, s, d = x.shape
+    d_in = cfg.expand * d
+    h = d_in // cfg.head_dim
+    g, n, w = cfg.n_groups, cfg.d_state, cfg.conv_width
+
+    z = x @ params["w_z"]                                        # (b,s,d_in)
+    xBC = jnp.concatenate([x @ params["w_x"], x @ params["w_bc"]], axis=-1)
+    dt = x @ params["w_dt"]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (b,s,h)
+    conv_w = jnp.concatenate([params["conv_x"], params["conv_bc"]], axis=-1)
+
+    # depthwise causal conv over (x, B, C)
+    if decode:
+        new_conv = jnp.concatenate([conv_state[:, 1:], xBC[:, :1]], axis=1)
+        xBC = jnp.einsum("bwc,wc->bc", new_conv, conv_w)[:, None]
+        conv_out_state = new_conv
+    else:
+        pad = jnp.zeros((b, w - 1, xBC.shape[-1]), xBC.dtype)
+        xp = jnp.concatenate([pad, xBC], axis=1)
+        conv_out_state = xp[:, -w:]     # last w pre-conv inputs (decode carry)
+        xBC = sum(
+            xp[:, i : i + s] * conv_w[i][None, None]
+            for i in range(w)
+        )
+    xBC = jax.nn.silu(xBC)
+    xs, B, C = jnp.split(xBC, [d_in, d_in + g * n], axis=-1)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))            # (h,) negative
+
+    if decode:
+        x1 = xs.reshape(b, h, cfg.head_dim)
+        y, new_state = ssd_decode_step(
+            x1, dt[:, 0], A, B.reshape(b, g, n), C.reshape(b, g, n),
+            params["D"], state)
+        y = y.reshape(b, 1, d_in)
+    else:
+        xh = xs.reshape(b, s, h, cfg.head_dim)
+        out = ssd_chunked(
+            xh, dt, A, B.reshape(b, s, g, n), C.reshape(b, s, g, n),
+            params["D"], cfg.chunk, use_kernel=use_kernel,
+            initial_state=state, return_state=True)
+        y, new_state = out
+        y = y.reshape(b, s, d_in)
+
+    # gated RMSNorm (Mamba-2 normalizes y * silu(z))
+    yz = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(yz.astype(jnp.float32)), axis=-1, keepdims=True)
+    yz = (yz.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-5)).astype(x.dtype)
+    yz = yz * params["norm"]
+    return yz @ params["out_proj"], new_state, conv_out_state
+
+
+__all__ = ["ssd_chunked", "ssd_decode_step", "mamba2_block"]

@@ -1,0 +1,145 @@
+"""Single-replica serving engine: fixed-slot continuous batcher over
+prefill/decode step functions, with straggler mitigation hooks.
+
+This is the per-replica substrate the elastic layer (repro.core.elastic)
+scales in and out.  Requests are classed by (prefill_len, decode_len) --
+the LLM analogue of the paper's tweet classes -- and the engine reports the
+application-level signals (queue depth, in-flight count, output score stream)
+that drive the paper's auto-scaling policies.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.registry import Model
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (prompt_len,) int32
+    max_new_tokens: int
+    arrival_s: float = 0.0
+    # filled by the engine
+    first_token_s: float | None = None
+    done_s: float | None = None
+    output: list = field(default_factory=list)
+    score: float = 0.0                 # application-data signal (e.g. mean logprob)
+
+    @property
+    def request_class(self) -> tuple[int, int]:
+        """(prefill bucket, decode bucket) -- the service-demand class."""
+        pb = 1 << max(int(np.ceil(np.log2(max(len(self.prompt), 1)))), 4)
+        db = 1 << max(int(np.ceil(np.log2(max(self.max_new_tokens, 1)))), 4)
+        return pb, db
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    max_batch: int = 8
+    max_len: int = 1024
+    eos_token: int = -1                # -1: run to max_new_tokens
+    greedy: bool = True
+
+
+class ServingEngine:
+    """Synchronous continuous batcher (slot-based).
+
+    One decode step advances every active slot; finished slots are refilled
+    from the queue with a fresh prefill.  This mirrors production continuous
+    batching while staying simple enough to run under interpret-mode tests.
+    """
+
+    def __init__(self, model: Model, params, cfg: ServeConfig):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.queue: list[Request] = []
+        self.active: dict[int, Request] = {}       # slot -> request
+        self.pos = np.zeros(cfg.max_batch, dtype=np.int32)
+        self.remaining = np.zeros(cfg.max_batch, dtype=np.int32)
+        self.cache = None
+        self._decode = jax.jit(model.decode_step)
+        self._prefill_one = jax.jit(
+            lambda p, b: model.prefill(p, b, max_len=cfg.max_len))
+        self.completed: list[Request] = []
+        self.step_count = 0
+
+    # -- queue interface ----------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    @property
+    def n_in_system(self) -> int:
+        return len(self.queue) + len(self.active)
+
+    # -- scheduling ---------------------------------------------------------------
+    def _fill_slots(self, now: float) -> None:
+        free = [s for s in range(self.cfg.max_batch) if s not in self.active]
+        for slot in free:
+            if not self.queue:
+                break
+            req = self.queue.pop(0)
+            toks = jnp.asarray(req.prompt, jnp.int32)[None]
+            logits, cache1 = self._prefill_one(self.params, {"tokens": toks})
+            tok = int(jnp.argmax(logits[0, -1]))
+            req.output.append(tok)
+            req.first_token_s = now
+            if self.cache is None:
+                self.cache = jax.tree.map(
+                    lambda c: jnp.repeat(jnp.zeros_like(c), self.cfg.max_batch, axis=1),
+                    cache1)
+            # install the prefilled cache into the slot (batch dim = axis 1)
+            self.cache = jax.tree.map(
+                lambda full, one: jax.lax.dynamic_update_slice_in_dim(
+                    full, one.astype(full.dtype), slot, axis=1),
+                self.cache, cache1)
+            self.pos[slot] = len(req.prompt)
+            self.remaining[slot] = req.max_new_tokens - 1
+            self.active[slot] = req
+
+    def step(self, now: float | None = None) -> int:
+        """One engine step: refill + one decode for all active slots.
+        Returns the number of active slots advanced."""
+        now = time.monotonic() if now is None else now
+        self._fill_slots(now)
+        if not self.active:
+            return 0
+        # batch decode: positions differ per slot => run per-slot decode at the
+        # max pos and mask.  For simplicity (CPU substrate) we decode slot-wise
+        # when positions are heterogeneous, batched when uniform.
+        toks = np.zeros((self.cfg.max_batch, 1), np.int32)
+        for slot, req in self.active.items():
+            toks[slot, 0] = req.output[-1]
+        # per-slot positions (vector-pos decode: each slot has its own KV length)
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(toks), jnp.asarray(self.pos))
+        next_toks = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        finished = []
+        for slot, req in self.active.items():
+            tok = int(next_toks[slot])
+            req.output.append(tok)
+            self.pos[slot] += 1
+            self.remaining[slot] -= 1
+            if self.remaining[slot] <= 0 or tok == self.cfg.eos_token:
+                req.done_s = now
+                finished.append(slot)
+        for slot in finished:
+            self.completed.append(self.active.pop(slot))
+        self.step_count += 1
+        return len(self.active) + len(finished)
+
+    def run_until_drained(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if not self.queue and not self.active:
+                return
+            self.step()
+        raise RuntimeError("engine failed to drain")
+
+
+__all__ = ["Request", "ServeConfig", "ServingEngine"]

@@ -1,0 +1,1 @@
+from repro.utils.stats import mean_confidence_interval, pearson

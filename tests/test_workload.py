@@ -1,0 +1,48 @@
+"""Calibrated trace generator vs the paper's published statistics."""
+import numpy as np
+import pytest
+
+from repro.core.signals import burst_lead_report, lag_correlation_table
+from repro.core.simulator import MATCHES, generate_trace
+
+
+@pytest.mark.parametrize("match", list(MATCHES))
+def test_table2_totals(match):
+    tr = generate_trace(match, seed=0)
+    spec = MATCHES[match]
+    assert tr.n_tweets == pytest.approx(spec.total_tweets, rel=0.01)
+    assert tr.duration == int(round(spec.length_hours * 3600))
+    assert np.all(np.diff(tr.post_time) >= 0)          # sorted
+    assert tr.sentiment.min() >= 0.0 and tr.sentiment.max() <= 1.0
+
+
+def test_sentiment_volume_correlation_positive():
+    tr = generate_trace("spain", seed=0)
+    rows = lag_correlation_table(tr)
+    # the reconstructed trace reproduces the correlation STRUCTURE; absolute
+    # levels are trace-dependent (paper: 0.79 -> 0.70).  See EXPERIMENTS.md.
+    assert rows[0][1] > 0.35
+    assert rows[10][1] > 0.0
+
+
+def test_burst_early_warning():
+    det = tot = 0
+    for seed in range(3):
+        tr = generate_trace("spain", seed=seed)
+        rep = burst_lead_report(tr)
+        det += rep["n_detected"]
+        tot += rep["n_bursts"]
+    assert det / tot > 0.6             # most bursts detected (paper has FNs too)
+
+
+def test_zero_cycle_class_exists():
+    tr = generate_trace("england", seed=0)
+    assert (tr.cycles == 0.0).mean() == pytest.approx(0.10, abs=0.02)  # PE(1) path
+
+
+def test_seed_determinism():
+    a = generate_trace("france", seed=3)
+    b = generate_trace("france", seed=3)
+    assert a.n_tweets == b.n_tweets
+    assert np.array_equal(a.post_time, b.post_time)
+    assert np.array_equal(a.sentiment, b.sentiment)
