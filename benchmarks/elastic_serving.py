@@ -1,14 +1,28 @@
-"""Beyond-paper integration benchmark: the paper's three auto-scaling policies
-driving an elastic LLM-serving fleet (replica = unit of elasticity, roofline-
-priced request classes, application-output signal for appdata)."""
+"""Beyond-paper integration benchmark: the paper's auto-scaling policies (plus
+the redesign's target-tracking rule) driving an elastic LLM-serving fleet
+through the shared scaling control plane (replica = unit of elasticity,
+roofline-priced request classes, *named* application-output signal channels).
+
+The multi-channel scenario runs on a *flat-score* variant of the workload:
+the primary ``output_score`` channel stays flat at ~0.5 while a secondary
+``breaking_news`` channel (fraction of breaking-news-shaped answers) still
+leads each burst.  An AppDataPolicy watching only the primary channel can
+never fire there; one pinned to the ``breaking_news`` channel pre-provisions
+-- the capability the redesign adds."""
 from __future__ import annotations
 
 import numpy as np
 
 from benchmarks.common import Rows, banner
-from repro.core.autoscaler import AppDataPolicy, CompositePolicy, LoadPolicy, ThresholdPolicy
+from repro.core.autoscaler import (
+    AppDataPolicy,
+    CompositePolicy,
+    LoadPolicy,
+    TargetTrackingPolicy,
+    ThresholdPolicy,
+)
 from repro.core.elastic import ClusterConfig, ElasticCluster, ServeRequest
-from repro.core.simulator.distributions import ServiceModel
+from repro.core.scaling import RunReport
 
 
 class _ReplicaLoadPolicy(LoadPolicy):
@@ -44,10 +58,13 @@ class _ReplicaLoadPolicy(LoadPolicy):
         return f"replica-load(q={self.quantile:g})"
 
 
-def _workload(seed: int = 0, n: int = 12_000, horizon: float = 1200.0):
-    """Bursty request stream with an application-output signal that shifts
-    ~60 s before each burst (breaking-news queries produce high-score
-    outputs ahead of the traffic peak)."""
+def _workload(seed: int = 0, n: int = 12_000, horizon: float = 1200.0,
+              flat_score: bool = False):
+    """Bursty request stream with two application-output channels that shift
+    ~60 s before each burst: ``output_score`` (mean answer score) and
+    ``breaking_news`` (fraction of breaking-news-shaped answers).
+    ``flat_score=True`` pins the mean output score at ~0.5 so only the
+    ``breaking_news`` channel carries the early warning."""
     rng = np.random.default_rng(seed)
     bursts = [400.0, 800.0]
     t_axis = np.arange(int(horizon))
@@ -67,42 +84,64 @@ def _workload(seed: int = 0, n: int = 12_000, horizon: float = 1200.0):
                 prefill_len=int(rng.exponential(3000)) + 256,
                 decode_len=int(rng.exponential(100)) + 16,
                 score=float(np.clip(
-                    (0.92 if hot else 0.35) + rng.normal(0, 0.05), 0, 1)),
+                    (0.5 if flat_score else (0.92 if hot else 0.35))
+                    + rng.normal(0, 0.05), 0, 1)),
+                signals={"breaking_news":
+                         1.0 if (hot and rng.random() < 0.9) else 0.0},
             ))
             rid += 1
     return reqs
 
 
 def run(quick: bool = False) -> Rows:
-    banner("Elastic LLM serving under the paper's policies (beyond-paper)")
+    banner("Elastic LLM serving on the scaling control plane (beyond-paper)")
     rows = Rows("elastic")
     cfg = ClusterConfig()
     n = 4_000 if quick else 12_000
 
-    results = {}
+    results: dict[str, RunReport] = {}
     for name, mk in [
         ("threshold60", lambda h: ThresholdPolicy(0.6)),
+        ("target75", lambda h: TargetTrackingPolicy(target=0.75)),
         ("load_q99", lambda h: _ReplicaLoadPolicy(h, quantile=0.99, sla_s=cfg.sla_s)),
         ("load+appdata", lambda h: CompositePolicy([
             _ReplicaLoadPolicy(h, quantile=0.99, sla_s=cfg.sla_s),
             AppDataPolicy(extra_units=4, jump=0.5)])),
+        # multi-channel demo on the FLAT-score workload: the primary channel
+        # carries no warning, only breaking_news does
+        ("flat.load+appdata", lambda h: CompositePolicy([
+            _ReplicaLoadPolicy(h, quantile=0.99, sla_s=cfg.sla_s),
+            AppDataPolicy(extra_units=4, jump=0.5)])),
+        ("flat.load+appdata[breaking]", lambda h: CompositePolicy([
+            _ReplicaLoadPolicy(h, quantile=0.99, sla_s=cfg.sla_s),
+            AppDataPolicy(extra_units=4, jump=0.5, relative=False,
+                          channel="breaking_news")])),
     ]:
         holder = [None]
         policy = mk(holder)
-        cluster = ElasticCluster(cfg, policy, _workload(n=n))
+        cluster = ElasticCluster(
+            cfg, policy, _workload(n=n, flat_score=name.startswith("flat.")))
         holder[0] = cluster
         res = cluster.run()
         results[name] = res
-        rows.add(f"{name}.viol_pct", 100 * res["violation_rate"])
+        rows.add(f"{name}.viol_pct", 100 * res.violation_rate)
         rows.add(f"{name}.chip_hours", res["chip_hours"])
-        rows.add(f"{name}.p99_latency_s", res["p99_latency_s"])
-        rows.add(f"{name}.max_replicas", res["max_replicas"])
+        rows.add(f"{name}.p99_latency_s", res.p99_latency_s)
+        rows.add(f"{name}.max_replicas", res.max_units)
 
     thr, app = results["threshold60"], results["load+appdata"]
-    if thr["violation_rate"] > 0:
+    if thr.violation_rate > 0:
         rows.add("appdata_vs_threshold_viol_reduction_pct",
-                 100 * (thr["violation_rate"] - app["violation_rate"])
-                 / thr["violation_rate"])
+                 100 * (thr.violation_rate - app.violation_rate)
+                 / thr.violation_rate)
+    blind = results["flat.load+appdata"]
+    multi = results["flat.load+appdata[breaking]"]
+    rows.add("breaking_channel_fired",
+             float(any("breaking_news" in r.reason for r in multi.decisions)))
+    if blind.violation_rate > 0:
+        rows.add("breaking_vs_blind_viol_reduction_pct",
+                 100 * (blind.violation_rate - multi.violation_rate)
+                 / blind.violation_rate)
     return rows
 
 

@@ -1,6 +1,6 @@
 """Benchmark harness: one module per paper table/figure + framework benches.
 
-Usage:  PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+Usage:  PYTHONPATH=src python -m benchmarks.run [--quick|--smoke] [--only NAME]
 """
 from __future__ import annotations
 
@@ -21,14 +21,22 @@ MODULES = [
     "kernels_bench",
 ]
 
+#: fast subset exercising every control-plane path (simulator backend, elastic
+#: backend, multi-channel signals) -- the scripts/check.sh verify gate
+SMOKE_MODULES = ["littles_law", "fig8_appdata", "elastic_serving"]
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="reduced seeds/configs")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast verify pass: quick mode over a reduced module set")
     ap.add_argument("--only", default=None, help="run a single benchmark module")
     args = ap.parse_args()
+    if args.smoke:
+        args.quick = True
 
-    names = [args.only] if args.only else MODULES
+    names = [args.only] if args.only else (SMOKE_MODULES if args.smoke else MODULES)
     t0 = time.time()
     failures = []
     for name in names:

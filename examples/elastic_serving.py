@@ -1,12 +1,16 @@
 """End-to-end driver: SLA-aware elastic LLM serving with application-data
-auto-scaling (the paper's technique as a first-class feature of the fleet).
+auto-scaling (the paper's technique as a first-class feature of the fleet),
+running on the unified scaling control plane (repro.core.scaling; DESIGN.md).
 
 Phase A (mechanism, real JAX): scale a serving replica set out and in by
 re-meshing + re-sharding live parameters, measuring re-provisioning cost.
 
-Phase B (policy, fleet scale): the threshold / load / load+appdata policies
-managing a 64-replica fleet against a bursty request stream whose output-score
-signal leads the bursts -- reports SLA violations and chip-hours per policy.
+Phase B (policy, fleet scale): threshold / target-tracking / load /
+load+appdata policies managing a 64-replica fleet against a bursty request
+stream carrying two named output-signal channels (`output_score`,
+`breaking_news`) that lead the bursts -- reports SLA violations and
+chip-hours per policy, including a multi-channel appdata scenario pinned to
+the `breaking_news` channel.
 
 Run:  PYTHONPATH=src python examples/elastic_serving.py
 """

@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# One verify entrypoint for builders:
+#   tier-1 test suite  +  fast benchmark smoke pass (control-plane paths).
+# Usage:  bash scripts/check.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q
+
+echo
+echo "== smoke: benchmarks =="
+python -m benchmarks.run --smoke
+
+echo
+echo "check.sh: ALL OK"

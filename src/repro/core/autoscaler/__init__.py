@@ -1,7 +1,14 @@
 from repro.core.autoscaler.base import CompositePolicy, Decision, Observation, Policy
-from repro.core.autoscaler.policies import AppDataPolicy, LoadPolicy, ThresholdPolicy
+from repro.core.autoscaler.policies import (
+    AppDataPolicy,
+    LoadPolicy,
+    ScheduledPolicy,
+    TargetTrackingPolicy,
+    ThresholdPolicy,
+)
 
 __all__ = [
     "CompositePolicy", "Decision", "Observation", "Policy",
-    "AppDataPolicy", "LoadPolicy", "ThresholdPolicy",
+    "AppDataPolicy", "LoadPolicy", "ScheduledPolicy",
+    "TargetTrackingPolicy", "ThresholdPolicy",
 ]

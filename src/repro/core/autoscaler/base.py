@@ -1,16 +1,20 @@
-"""Auto-scaling policy interface shared by the tweet simulator (paper repro) and the
-elastic LLM-serving runtime (`repro.core.elastic`).
+"""Auto-scaling policy interface shared by every scaling backend (tweet
+simulator, elastic LLM-serving fleet, live serving driver).
 
 A policy sees an :class:`Observation` once per adaptation period and returns a
-:class:`Decision`.  The *controller* (simulator engine or replica manager) owns the
-mechanics the paper fixes in Table III: the 60 s adaptation frequency, the 60 s
-resource-provisioning delay, the 1-unit-at-a-time downscale limit, and the >= 1
-resource floor.
+:class:`Decision`.  The *controller* (`repro.core.scaling.ScalingController`)
+owns the mechanics the paper fixes in Table III: the 60 s adaptation
+frequency, the 60 s resource-provisioning delay, the 1-unit-at-a-time
+downscale limit, and the >= 1 resource floor.
 """
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING, Mapping
+
+if TYPE_CHECKING:  # no runtime import: scaling.controller imports this module
+    from repro.core.scaling.signals import WindowStats
 
 
 @dataclass(frozen=True)
@@ -19,7 +23,13 @@ class Observation:
 
     * infrastructure level -- ``utilization``;
     * system level -- ``n_in_system`` (queue + in service), ``input_rate``;
-    * application level -- the sentiment-window means (data produced *by* the app).
+    * application level -- ``signals``: windowed stats per *named channel* of
+      data produced by the application itself (sentiment of processed tweets,
+      score of generated answers, any user channel).
+
+    The ``app_*`` fields are the pre-redesign single-channel view; the
+    controller keeps them mirrored to its primary channel so existing policies
+    keep working.  New policies should read ``signal(channel)``.
     """
 
     time: float
@@ -28,9 +38,27 @@ class Observation:
     utilization: float                # mean busy fraction over the last adapt window
     n_in_system: int
     input_rate: float                 # arrivals/s over the last adapt window
-    app_window_mean: float            # mean app-signal, last window (post-time indexed)
-    app_prev_window_mean: float       # mean app-signal, window before that
-    app_window_count: int             # how many signal samples backed app_window_mean
+    app_window_mean: float = 0.0      # mean app-signal, last window (post-time indexed)
+    app_prev_window_mean: float = 0.0  # mean app-signal, window before that
+    app_window_count: int = 0         # how many signal samples backed app_window_mean
+    signals: Mapping[str, WindowStats] = field(default_factory=dict)
+
+    def signal(self, channel: str | None = None) -> WindowStats:
+        """Windowed stats for a named channel; ``None`` selects the backend's
+        primary channel (equivalently, the legacy ``app_*`` fields).
+
+        Channels register lazily on their first recorded sample, so a channel
+        with no data yet — or a misspelled name — reads as empty stats
+        (``count == 0``) rather than raising; signal-driven policies should
+        treat ``count`` below their sample floor as "no evidence"."""
+        from repro.core.scaling.signals import WindowStats
+        if channel is not None:
+            if channel in self.signals:
+                return self.signals[channel]
+            return WindowStats()
+        return WindowStats(mean=self.app_window_mean,
+                           count=self.app_window_count,
+                           prev_mean=self.app_prev_window_mean)
 
 
 @dataclass(frozen=True)

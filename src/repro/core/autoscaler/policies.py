@@ -16,6 +16,7 @@ from __future__ import annotations
 import math
 
 from repro.core.autoscaler.base import Decision, Observation, Policy
+from repro.core.scaling.registry import register_policy
 from repro.core.simulator.distributions import ServiceModel
 
 
@@ -122,37 +123,160 @@ class AppDataPolicy(Policy):
     name = "appdata"
 
     def __init__(self, *, jump: float = 0.5, extra_units: int = 1,
-                 min_samples: int = 20, relative: bool = True):
+                 min_samples: int = 20, relative: bool = True,
+                 channel: str | None = None):
         """``jump``: required window-mean rise.  ``relative=True`` (default) reads
         the paper's "increases by 0.5 or more" as a 50% *relative* rise -- with
         scores bounded in [0,1] and a typical level above 0.4 (Fig 2), an absolute
         +0.5 jump from the running level is close to unreachable, so the relative
         reading is the one that can have produced the paper's results.
         ``relative=False`` gives the literal absolute-difference trigger.
-        See DESIGN.md (Deviations)."""
+        ``channel`` names the SignalBus channel to watch; ``None`` (default)
+        watches the backend's primary channel.  See DESIGN.md (Deviations)."""
         self.jump = jump
         self.extra_units = extra_units
         self.min_samples = min_samples
         self.relative = relative
+        self.channel = channel
         self._armed = True
 
     def reset(self) -> None:
         self._armed = True
 
     def decide(self, obs: Observation) -> Decision:
-        if obs.app_window_count < self.min_samples:
+        st = obs.signal(self.channel)
+        if st.count < self.min_samples:
             return Decision()
-        rise = obs.app_window_mean - obs.app_prev_window_mean
-        if self.relative:
-            rise = rise / obs.app_prev_window_mean if obs.app_prev_window_mean > 1e-6 else 0.0
+        rise = st.relative_rise if self.relative else st.rise
         if rise >= self.jump:
             if self._armed:
                 self._armed = False
+                label = self.channel or "signal"
                 return Decision(self.extra_units,
-                                f"sentiment +{rise:.2f} >= {self.jump:.2f}")
+                                f"{label} +{rise:.2f} >= {self.jump:.2f}")
             return Decision()
         self._armed = True
         return Decision()
 
     def describe(self) -> str:
-        return f"appdata(+{self.extra_units})"
+        ch = f",{self.channel}" if self.channel else ""
+        return f"appdata(+{self.extra_units}{ch})"
+
+
+class TargetTrackingPolicy(Policy):
+    """ASG-style target tracking (SNIPPETS: "Target tracking (e.g., 50% CPU)").
+
+    Keeps a metric near ``target`` by solving for the capacity that would put
+    it there under linear scaling:  ``desired = ceil(capacity * metric /
+    target)``.  Tracks ``utilization`` by default; ``metric="in_system"``
+    tracks items-in-system per unit; ``metric="signal"`` tracks a named
+    application channel's window mean.  A dead band around the target prevents
+    flapping, and scale-in honours an optional cooldown.
+    """
+
+    name = "target"
+
+    def __init__(self, *, target: float = 0.5, metric: str = "utilization",
+                 channel: str | None = None, deadband: float = 0.1,
+                 cooldown_s: float = 0.0):
+        if target <= 0.0:
+            raise ValueError(f"target must be positive, got {target}")
+        if metric not in ("utilization", "in_system", "signal"):
+            raise ValueError(f"unknown metric {metric!r}")
+        self.target = target
+        self.metric = metric
+        self.channel = channel
+        self.deadband = deadband
+        self.cooldown_s = cooldown_s
+        self._last_action_t = -math.inf
+
+    def reset(self) -> None:
+        self._last_action_t = -math.inf
+
+    def _current(self, obs: Observation) -> float:
+        if self.metric == "utilization":
+            return obs.utilization
+        if self.metric == "in_system":
+            cap = max(obs.n_units + obs.n_pending, 1)
+            return obs.n_in_system / cap
+        return obs.signal(self.channel).mean
+
+    def decide(self, obs: Observation) -> Decision:
+        cur = self._current(obs)
+        if abs(cur - self.target) <= self.deadband * self.target:
+            return Decision()
+        capacity = obs.n_units + obs.n_pending
+        # utilization is produced by the LIVE units only, so the implied load is
+        # n_units * cur; scaling pending capacity by it would re-request units
+        # that are already provisioning, compounding every tick the delay spans.
+        # The other metrics are already normalized over full capacity.
+        basis = obs.n_units if self.metric == "utilization" else capacity
+        desired = max(math.ceil(basis * cur / self.target), 1)
+        delta = desired - capacity
+        if delta > 0:
+            self._last_action_t = obs.time
+            return Decision(delta, f"{self.metric} {cur:.2f} -> target {self.target:.2f}")
+        # scale in only when the metric itself is low: pending capacity queued
+        # by a co-composed policy can push capacity past desired while the
+        # live units are still running hot
+        if delta < 0 and cur < self.target and obs.n_units > 1:
+            if obs.time - self._last_action_t < self.cooldown_s:
+                return Decision()
+            self._last_action_t = obs.time
+            return Decision(-1, f"{self.metric} {cur:.2f} below target")
+        return Decision()
+
+    def describe(self) -> str:
+        return f"target({self.metric}={self.target:g})"
+
+
+class ScheduledPolicy(Policy):
+    """ASG "scheduled actions": hold a capacity floor during known windows
+    (match kickoff, product launch, nightly batch).  Pre-provisions *ahead* of
+    each window by the provisioning delay so the floor is usable when the
+    window opens; outside windows it stays silent, composing with reactive
+    policies in a :class:`CompositePolicy`.
+    """
+
+    name = "scheduled"
+
+    def __init__(self, schedule: list[tuple[float, float, int]], *,
+                 lead_s: float = 60.0):
+        """``schedule``: (start_s, end_s, min_units) entries; ``lead_s``: how
+        far ahead of a window start to request capacity (set this to the
+        backend's provisioning delay)."""
+        self.schedule = sorted(schedule)
+        self.lead_s = lead_s
+
+    def _floor(self, t: float) -> int:
+        floor = 0
+        for start, end, units in self.schedule:
+            if start - self.lead_s <= t < end:
+                floor = max(floor, units)
+        return floor
+
+    def decide(self, obs: Observation) -> Decision:
+        floor = self._floor(obs.time)
+        have = obs.n_units + obs.n_pending
+        if have < floor:
+            return Decision(floor - have, f"scheduled floor {floor}")
+        return Decision()
+
+    def describe(self) -> str:
+        return f"scheduled({len(self.schedule)} windows)"
+
+
+# -- registry: name -> factory, so launchers/benchmarks can name policies ------------
+def _scheduled_factory(**kw):
+    if "schedule" not in kw:
+        raise ValueError(
+            "policy 'scheduled' needs schedule=[(start_s, end_s, min_units), ...]")
+    return ScheduledPolicy(kw.pop("schedule"), **kw)
+
+
+register_policy("threshold", ThresholdPolicy)
+register_policy("load",
+                lambda **kw: LoadPolicy(kw.pop("service_model", ServiceModel()), **kw))
+register_policy("appdata", AppDataPolicy)
+register_policy("target", TargetTrackingPolicy)
+register_policy("scheduled", _scheduled_factory)

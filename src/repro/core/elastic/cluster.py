@@ -20,6 +20,14 @@ The cluster itself is a discrete-time simulation (1 s steps) whose per-replica
 throughput is derived from the dry-run roofline numbers, so policy behaviour
 is faithful to what the real fleet would do; the *mechanism* (mesh rebuild +
 parameter resharding) is real JAX, exercised by `remesh.py` + tests.
+
+Table III mechanics and window accounting are delegated to the shared
+:class:`repro.core.scaling.ScalingController`/:class:`SignalBus` control
+plane; this module only models the replica fleet's service process.  The
+primary signal channel is ``output_score`` (windowed mean score of generated
+answers); requests may carry additional named channels in ``signals`` (e.g. a
+refusal-rate or topic-shift stream), all observable by policies via
+``Observation.signal(channel)``.
 """
 from __future__ import annotations
 
@@ -28,7 +36,13 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core.autoscaler.base import Decision, Observation, Policy
+from repro.core.autoscaler.base import Policy
+from repro.core.scaling import (
+    ControllerConfig,
+    RunReport,
+    ScalingController,
+    SignalBus,
+)
 
 
 @dataclass(frozen=True)
@@ -49,6 +63,7 @@ class ServeRequest:
     decode_len: int
     score: float = 0.5            # application-output signal carried by the reply
     done_s: float | None = None
+    signals: dict[str, float] = field(default_factory=dict)   # extra named channels
 
     def work_prefill(self) -> float:
         return float(self.prefill_len)
@@ -67,6 +82,7 @@ class ClusterConfig:
     max_replicas: int = 64
     app_window_s: float = 60.0
     step_s: float = 1.0
+    signal_channel: str = "output_score"     # primary channel (legacy app_* tier)
 
 
 class _ClassModel:
@@ -118,48 +134,49 @@ class ElasticCluster:
         per = self.class_model.quantile_seconds(q)
         return n_in_system * per / replicas
 
-    def run(self) -> dict:
+    def run(self) -> RunReport:
         cfg = self.cfg
-        self.policy.reset()
+        bus = SignalBus((cfg.signal_channel,), bin_s=cfg.step_s)
+        ctrl = ScalingController(
+            self.policy,
+            ControllerConfig(
+                adapt_period_s=cfg.adapt_period_s,
+                provision_delay_s=cfg.provision_delay_s,
+                max_units=cfg.max_replicas,
+                step_s=cfg.step_s,
+                app_window_s=cfg.app_window_s,
+                signal_channel=cfg.signal_channel,
+            ),
+            bus,
+            starting_units=cfg.starting_replicas,
+        )
         t = 0.0
         heads = 0
-        replicas = cfg.starting_replicas
-        pending: list[tuple[float, int]] = []
-        queue: list[ServeRequest] = []
-        # work accounting: each replica serves work at 1 replica-second/second
+        # explicit work accounting: the queue and slots carry (remaining service
+        # seconds, request) pairs priced by the class model at arrival
+        queue: list[tuple[float, ServeRequest]] = []
         inflight: list[list] = []     # [remaining_work_s, req]
         done: list[ServeRequest] = []
         replica_seconds = 0.0
         hist_replicas = []
-        win_busy: list[float] = []
-        win_arr = 0
-        score_bins_sum: dict[int, float] = {}
-        score_bins_cnt: dict[int, int] = {}
-        n_up = n_down = 0
 
         horizon = self.incoming[-1].arrival_s + 1.0 if self.incoming else 1.0
         while True:
-            # provisioning
-            ready = [p for p in pending if p[0] <= t]
-            if ready:
-                replicas = min(replicas + sum(c for _, c in ready), cfg.max_replicas)
-                pending = [p for p in pending if p[0] > t]
+            replicas = ctrl.on_step_start(t)
             # arrivals
             new_arr = 0
             while heads < len(self.incoming) and self.incoming[heads].arrival_s <= t:
                 r = self.incoming[heads]
-                queue.append(r)
-                inflightable = self.class_model.seconds_of(r)
-                r._work = inflightable            # type: ignore[attr-defined]
+                queue.append((self.class_model.seconds_of(r), r))
                 heads += 1
                 new_arr += 1
-            win_arr += new_arr
             # admit into slots
             capacity_slots = replicas * cfg.replica.max_slots
             while queue and len(inflight) < capacity_slots:
-                r = queue.pop(0)
-                inflight.append([r._work, r])     # type: ignore[attr-defined]
+                work, r = queue.pop(0)
+                inflight.append([work, r])
             # serve: processor sharing of replica-seconds across in-flight
+            finished: list[ServeRequest] = []
             if inflight:
                 capacity = replicas * cfg.step_s
                 demand = sum(item[0] for item in inflight)
@@ -172,47 +189,29 @@ class ElasticCluster:
                         req = item[1]
                         req.done_s = t + cfg.step_s
                         done.append(req)
-                        b = int(req.arrival_s)
-                        score_bins_sum[b] = score_bins_sum.get(b, 0.0) + req.score
-                        score_bins_cnt[b] = score_bins_cnt.get(b, 0) + 1
+                        finished.append(req)
                     else:
                         nxt.append(item)
                 inflight = nxt
             else:
                 busy = 0.0
-            win_busy.append(busy)
+            if finished:
+                # signals indexed by ARRIVAL time (§V-B post-time indexing)
+                arr = np.array([req.arrival_s for req in finished])
+                bus.record(cfg.signal_channel,
+                           arr, np.array([req.score for req in finished]))
+                extra_channels: dict[str, list[tuple[float, float]]] = {}
+                for req in finished:
+                    for name, val in req.signals.items():
+                        extra_channels.setdefault(name, []).append((req.arrival_s, val))
+                for name, pairs in extra_channels.items():
+                    ts, vs = zip(*pairs)
+                    bus.record(name, np.array(ts), np.array(vs))
             replica_seconds += replicas * cfg.step_s
             hist_replicas.append(replicas)
 
-            # adapt
-            if int(t + cfg.step_s) % int(cfg.adapt_period_s) == 0:
-                w = int(cfg.app_window_s)
-                now_b = int(t)
-                def wmean(lo, hi):
-                    ssum = sum(score_bins_sum.get(b, 0.0) for b in range(lo, hi))
-                    cnt = sum(score_bins_cnt.get(b, 0) for b in range(lo, hi))
-                    return (ssum / cnt if cnt else 0.0), cnt
-                m1, c1 = wmean(now_b - w, now_b)
-                m0, _ = wmean(now_b - 2 * w, now_b - w)
-                obs = Observation(
-                    time=t,
-                    n_units=replicas,
-                    n_pending=sum(c for _, c in pending),
-                    utilization=float(np.mean(win_busy)) if win_busy else 0.0,
-                    n_in_system=len(queue) + len(inflight),
-                    input_rate=win_arr / cfg.adapt_period_s,
-                    app_window_mean=m1,
-                    app_prev_window_mean=m0,
-                    app_window_count=c1,
-                )
-                d = self.policy.decide(obs)
-                if d.delta > 0:
-                    n_up += 1
-                    pending.append((t + cfg.provision_delay_s, int(d.delta)))
-                elif d.delta < 0 and replicas > 1:
-                    n_down += 1
-                    replicas -= 1
-                win_busy, win_arr = [], 0
+            ctrl.note_step(busy, new_arr)
+            ctrl.maybe_adapt(time=t, n_in_system=len(queue) + len(inflight))
 
             t += cfg.step_s
             if t > horizon and not queue and not inflight and heads >= len(self.incoming):
@@ -221,17 +220,20 @@ class ElasticCluster:
                 raise RuntimeError("cluster failed to drain")
 
         lat = np.array([r.done_s - r.arrival_s for r in done])
-        return {
-            "n_done": len(done),
-            "violation_rate": float(np.mean(lat > cfg.sla_s)) if lat.size else 0.0,
-            "mean_latency_s": float(lat.mean()) if lat.size else 0.0,
-            "p99_latency_s": float(np.quantile(lat, 0.99)) if lat.size else 0.0,
-            "replica_hours": replica_seconds / 3600.0,
-            "chip_hours": replica_seconds * cfg.replica.chips / 3600.0,
-            "max_replicas": int(max(hist_replicas) if hist_replicas else 0),
-            "n_scale_ups": n_up,
-            "n_scale_downs": n_down,
-        }
+        return RunReport(
+            backend="elastic",
+            workload=f"{len(self.incoming)} requests",
+            policy=self.policy.describe(),
+            sla_s=cfg.sla_s,
+            latencies=lat,
+            unit_seconds=replica_seconds,
+            units_t=np.asarray(hist_replicas, dtype=np.int64),
+            n_decisions_up=ctrl.n_up,
+            n_decisions_down=ctrl.n_down,
+            unit_name="replica",
+            decisions=ctrl.decision_log,
+            extra={"chip_hours": replica_seconds * cfg.replica.chips / 3600.0},
+        )
 
 
 __all__ = ["ClusterConfig", "ElasticCluster", "ReplicaSpec", "ServeRequest"]

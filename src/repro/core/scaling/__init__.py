@@ -1,0 +1,22 @@
+"""The scaling control plane: monitoring (SignalBus), decision/actuation
+(ScalingController), and the backend/result contract (ScalableBackend,
+RunReport) every scaled system shares.  See DESIGN.md."""
+from repro.core.scaling.signals import DEFAULT_CHANNEL, SignalBus, WindowStats
+from repro.core.scaling.controller import (
+    ControllerConfig,
+    DecisionRecord,
+    ScalingController,
+)
+from repro.core.scaling.backend import RunReport, ScalableBackend, compare
+from repro.core.scaling.registry import (
+    available_policies,
+    make_policy,
+    register_policy,
+)
+
+__all__ = [
+    "DEFAULT_CHANNEL", "SignalBus", "WindowStats",
+    "ControllerConfig", "DecisionRecord", "ScalingController",
+    "RunReport", "ScalableBackend", "compare",
+    "available_policies", "make_policy", "register_policy",
+]

@@ -1,0 +1,125 @@
+"""ScalableBackend protocol + the shared RunReport result schema.
+
+A backend is anything that serves work with a scalable pool of units and lets
+a :class:`~repro.core.scaling.controller.ScalingController` drive the pool:
+the tweet simulator (`repro.core.simulator.Engine`), the elastic replica
+fleet (`repro.core.elastic.ElasticCluster`), and the live serving driver
+(`repro.launch.serve.ServeBackend`).  They all return a RunReport, so
+benchmarks and examples compare policies across backends with one code path.
+
+RunReport also supports ``report["key"]`` lookups over its summary dict so
+pre-redesign call sites that consumed the ElasticCluster result dict keep
+working unchanged.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Iterator, Mapping, Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.core.scaling.controller import DecisionRecord
+
+
+@dataclass
+class RunReport:
+    """Per-run outputs every backend reports in the same shape."""
+
+    backend: str                  # "simulator" | "elastic" | "serve" | ...
+    workload: str                 # trace / stream identifier
+    policy: str                   # policy.describe()
+    sla_s: float
+    latencies: np.ndarray         # per-item completion latency, seconds
+    unit_seconds: float           # integral of usable units over time
+    units_t: np.ndarray           # usable units per step
+    n_decisions_up: int = 0
+    n_decisions_down: int = 0
+    unit_name: str = "unit"       # what one unit is (cpu / replica / slot)
+    decisions: list[DecisionRecord] = field(default_factory=list)
+    extra: dict[str, Any] = field(default_factory=dict)   # backend-specific rows
+    _summary_cache: dict[str, Any] | None = field(
+        default=None, init=False, repr=False, compare=False)
+
+    # -- derived metrics -------------------------------------------------------------
+    @property
+    def n_done(self) -> int:
+        return int(self.latencies.size)
+
+    @property
+    def violation_rate(self) -> float:
+        if self.latencies.size == 0:
+            return 0.0
+        return float(np.mean(self.latencies > self.sla_s))
+
+    @property
+    def mean_latency_s(self) -> float:
+        return float(self.latencies.mean()) if self.latencies.size else 0.0
+
+    @property
+    def p99_latency_s(self) -> float:
+        return float(np.quantile(self.latencies, 0.99)) if self.latencies.size else 0.0
+
+    @property
+    def unit_hours(self) -> float:
+        return self.unit_seconds / 3600.0
+
+    @property
+    def max_units(self) -> int:
+        return int(self.units_t.max()) if self.units_t.size else 0
+
+    def summary(self) -> dict[str, Any]:
+        # reports are effectively immutable after construction; cache so the
+        # mapping shim doesn't recompute quantiles on every lookup
+        if self._summary_cache is not None:
+            return dict(self._summary_cache)
+        out = {
+            "backend": self.backend,
+            "workload": self.workload,
+            "policy": self.policy,
+            "n_done": self.n_done,
+            "violation_rate": self.violation_rate,
+            "violation_pct": 100.0 * self.violation_rate,
+            "mean_latency_s": self.mean_latency_s,
+            "p99_latency_s": self.p99_latency_s,
+            f"{self.unit_name}_hours": self.unit_hours,
+            "max_units": self.max_units,
+            f"max_{self.unit_name}s": self.max_units,
+            "n_scale_ups": self.n_decisions_up,
+            "n_scale_downs": self.n_decisions_down,
+        }
+        out.update(self.extra)
+        self._summary_cache = out
+        return dict(out)
+
+    # -- mapping shim (legacy result-dict call sites) ---------------------------------
+    def __getitem__(self, key: str) -> Any:
+        return self.summary()[key]
+
+    def __contains__(self, key: str) -> bool:
+        return key in self.summary()
+
+    def keys(self) -> Iterator[str]:
+        return iter(self.summary().keys())
+
+
+@runtime_checkable
+class ScalableBackend(Protocol):
+    """Anything a ScalingController can scale: run one workload, report one
+    RunReport.  Backends construct their controller themselves (they know
+    their unit semantics, step size, and signal channels)."""
+
+    def run(self) -> RunReport: ...
+
+
+def compare(reports: Mapping[str, RunReport]) -> list[dict[str, Any]]:
+    """Flatten named reports into comparable summary rows (one code path for
+    benchmarks/ and examples/ across backends)."""
+    rows = []
+    for name, rep in reports.items():
+        row = {"name": name}
+        row.update(rep.summary())
+        rows.append(row)
+    return rows
+
+
+__all__ = ["RunReport", "ScalableBackend", "compare"]

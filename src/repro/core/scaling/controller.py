@@ -1,0 +1,165 @@
+"""ScalingController: the decision/actuation tier of the scaling control plane.
+
+Owns, exactly once, the controller mechanics the paper fixes in Table III --
+the adaptation cadence, the resource-provisioning delay queue, the
+1-unit-at-a-time downscale cap, and the unit floor/ceiling -- plus the window
+accounting (busy fraction, arrival rate) that backs each Observation.  Both
+simulation backends (`repro.core.simulator.Engine`,
+`repro.core.elastic.ElasticCluster`) and the live serving driver
+(`repro.launch.serve`) drive their step loop through this object; policies
+never see anything but an :class:`Observation`.
+
+Per-step protocol (one call each, in order):
+
+    units = ctrl.on_step_start(now)        # provisioned units arriving <= now
+    ... backend serves one step with `units` ...
+    ctrl.note_step(busy_fraction, new_arrivals)
+    rec = ctrl.maybe_adapt(time=.., n_in_system=..)   # None off-cadence
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import TYPE_CHECKING
+
+import numpy as np
+
+from repro.core.scaling.signals import DEFAULT_CHANNEL, SignalBus
+
+if TYPE_CHECKING:  # runtime import is deferred: autoscaler imports this package
+    from repro.core.autoscaler.base import Decision, Observation, Policy
+
+
+@dataclass(frozen=True)
+class ControllerConfig:
+    """Table III knobs, backend-agnostic (a 'unit' is a CPU, a replica, or a
+    decode slot -- whatever the backend scales)."""
+
+    adapt_period_s: float = 60.0
+    provision_delay_s: float = 60.0
+    min_units: int = 1
+    max_units: int = 4096
+    downscale_cap: int = 1           # "Downscaling is limited to a single CPU"
+    step_s: float = 1.0
+    app_window_s: float = 120.0      # window for the application-signal tier
+    signal_channel: str = DEFAULT_CHANNEL   # channel mirrored into the legacy
+                                            # Observation.app_* fields
+
+    @property
+    def period_steps(self) -> int:
+        return int(self.adapt_period_s / self.step_s)
+
+    @property
+    def window_bins(self) -> int:
+        return int(self.app_window_s / self.step_s)
+
+
+@dataclass(frozen=True)
+class DecisionRecord:
+    """One adaptation tick: what the policy asked for and what was actuated."""
+
+    time: float
+    requested: int        # raw policy delta
+    applied: int          # queued (if > 0) or released now (if < 0)
+    reason: str
+    units: int            # usable units right after the tick
+    pending: int          # units still inside the provisioning delay
+
+
+class ScalingController:
+    """Single control plane shared by every ScalableBackend."""
+
+    def __init__(
+        self,
+        policy: Policy,
+        cfg: ControllerConfig,
+        bus: SignalBus | None = None,
+        *,
+        starting_units: int = 1,
+    ):
+        self.policy = policy
+        self.cfg = cfg
+        self.bus = bus if bus is not None else SignalBus((cfg.signal_channel,),
+                                                         bin_s=cfg.step_s)
+        self.reset(starting_units)
+
+    # -- lifecycle ------------------------------------------------------------------
+    def reset(self, starting_units: int | None = None) -> None:
+        if starting_units is not None:
+            self._start_units = starting_units
+        self.units: int = self._start_units
+        self.pending: list[tuple[float, int]] = []   # (available_at, count)
+        self.decision_log: list[DecisionRecord] = []
+        self.n_up = 0
+        self.n_down = 0
+        self._steps = 0
+        self._win_busy: list[float] = []
+        self._win_arrivals = 0
+        self.policy.reset()
+
+    @property
+    def n_pending(self) -> int:
+        return sum(c for _, c in self.pending)
+
+    # -- per-step protocol ----------------------------------------------------------
+    def on_step_start(self, now: float) -> int:
+        """Land provisioned units whose delay has elapsed; return usable units."""
+        if self.pending:
+            ready = sum(c for at, c in self.pending if at <= now)
+            if ready:
+                self.units = min(self.units + ready, self.cfg.max_units)
+                self.pending = [p for p in self.pending if p[0] > now]
+        return self.units
+
+    def note_step(self, busy_fraction: float, new_arrivals: int) -> None:
+        """Accumulate the infrastructure/system window for the next Observation."""
+        self._win_busy.append(float(busy_fraction))
+        self._win_arrivals += int(new_arrivals)
+        self._steps += 1
+
+    def should_adapt(self) -> bool:
+        return self._steps % self.cfg.period_steps == 0
+
+    def observe(self, *, time: float, n_in_system: int) -> Observation:
+        """Build the three-tier Observation at the current window edge."""
+        from repro.core.autoscaler.base import Observation
+        signals = self.bus.snapshot(self._steps, self.cfg.window_bins)
+        primary = signals.get(self.cfg.signal_channel)
+        return Observation(
+            time=time,
+            n_units=self.units,
+            n_pending=self.n_pending,
+            utilization=float(np.mean(self._win_busy)) if self._win_busy else 0.0,
+            n_in_system=int(n_in_system),
+            input_rate=self._win_arrivals / self.cfg.adapt_period_s,
+            app_window_mean=primary.mean if primary else 0.0,
+            app_prev_window_mean=primary.prev_mean if primary else 0.0,
+            app_window_count=primary.count if primary else 0,
+            signals=signals,
+        )
+
+    def maybe_adapt(self, *, time: float, n_in_system: int) -> DecisionRecord | None:
+        """On-cadence: observe -> decide -> actuate under Table III mechanics."""
+        if not self.should_adapt():
+            return None
+        obs = self.observe(time=time, n_in_system=n_in_system)
+        d: Decision = self.policy.decide(obs)
+        applied = 0
+        if d.delta > 0:
+            self.n_up += 1
+            applied = int(d.delta)
+            self.pending.append((time + self.cfg.provision_delay_s, applied))
+        elif d.delta < 0 and self.units > self.cfg.min_units:
+            self.n_down += 1
+            applied = -min(self.cfg.downscale_cap, -int(d.delta),
+                           self.units - self.cfg.min_units)
+            self.units += applied
+        rec = DecisionRecord(time=time, requested=int(d.delta), applied=applied,
+                             reason=d.reason, units=self.units,
+                             pending=self.n_pending)
+        self.decision_log.append(rec)
+        self._win_busy = []
+        self._win_arrivals = 0
+        return rec
+
+
+__all__ = ["ControllerConfig", "DecisionRecord", "ScalingController"]

@@ -17,10 +17,12 @@ directly, vectorized:
 Bit-identical outcome to the paper's loop, ~1000x faster -- this is what makes the
 4.3M-tweet Spain trace x repeat-until-CI feasible.
 
-The engine also owns the controller mechanics of Table III: the 60 s adaptation
-frequency, the 60 s provisioning delay, the single-unit downscale cap, and the
->= 1 unit floor.  Policies (repro.core.autoscaler) only see an Observation and
-return a Decision.
+The Table III controller mechanics (60 s adaptation frequency, 60 s
+provisioning delay, single-unit downscale cap, >= 1 unit floor) live in the
+shared :class:`repro.core.scaling.ScalingController`; the per-second sentiment
+bins live in a :class:`repro.core.scaling.SignalBus` channel.  The engine is
+one :class:`~repro.core.scaling.ScalableBackend` among several -- it only
+simulates the processor-sharing service and feeds the control plane.
 """
 from __future__ import annotations
 
@@ -28,7 +30,13 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core.autoscaler.base import Observation, Policy
+from repro.core.autoscaler.base import Policy
+from repro.core.scaling import (
+    ControllerConfig,
+    RunReport,
+    ScalingController,
+    SignalBus,
+)
 from repro.core.simulator.workload import Trace
 
 
@@ -52,43 +60,47 @@ class SimConfig:
 
 
 @dataclass
-class SimResult:
-    """Per-run outputs + the time series the benchmarks/figures need."""
+class SimResult(RunReport):
+    """Simulator RunReport + the time series the benchmarks/figures need.
 
-    match: str
-    policy: str
-    delays: np.ndarray           # per-tweet total delay (finish - post), seconds
-    sla_s: float
-    cpu_seconds: float           # integral of active units over time
-    units_t: np.ndarray          # active units per step
-    util_t: np.ndarray           # busy fraction per step
-    in_system_t: np.ndarray      # tweets in the system per step
-    n_decisions_up: int
-    n_decisions_down: int
+    Legacy accessors (``match``, ``delays``, ``cpu_seconds``, ...) map onto the
+    shared RunReport schema so pre-redesign call sites keep working.
+    """
+
+    util_t: np.ndarray = field(                      # busy fraction per step
+        default_factory=lambda: np.empty(0, np.float32))
+    in_system_t: np.ndarray = field(                 # tweets in the system per step
+        default_factory=lambda: np.empty(0, np.int64))
 
     @property
-    def violation_rate(self) -> float:
-        if self.delays.size == 0:
-            return 0.0
-        return float(np.mean(self.delays > self.sla_s))
+    def match(self) -> str:
+        return self.workload
+
+    @property
+    def delays(self) -> np.ndarray:
+        return self.latencies
+
+    @property
+    def cpu_seconds(self) -> float:
+        return self.unit_seconds
 
     @property
     def cpu_hours(self) -> float:
-        return self.cpu_seconds / 3600.0
+        return self.unit_seconds / 3600.0
 
     @property
     def mean_delay(self) -> float:
-        return float(self.delays.mean()) if self.delays.size else 0.0
+        return self.mean_latency_s
 
     def summary(self) -> dict:
-        return {
+        out = super().summary()
+        out.update({
             "match": self.match,
-            "policy": self.policy,
             "violation_pct": 100.0 * self.violation_rate,
             "cpu_hours": self.cpu_hours,
             "mean_delay_s": self.mean_delay,
-            "max_units": int(self.units_t.max()) if self.units_t.size else 0,
-        }
+        })
+        return out
 
 
 def _water_level(rem_sorted: np.ndarray, capacity: float) -> tuple[float, int]:
@@ -124,7 +136,6 @@ class Engine:
         cfg = self.cfg
         tr = self.trace
         policy = self.policy
-        policy.reset()
 
         step = cfg.step_s
         n_total = tr.n_tweets
@@ -144,36 +155,35 @@ class Engine:
         # completed-tweet accounting
         delays = np.zeros(n_total, dtype=np.float64)
         n_done = 0
-        # app-signal accumulators: per-second bins of completed tweets, by POST time
+        # app-signal channel: per-second bins of completed tweets, by POST time
         # (§V-B: "it is not the time the tweet is done being processed that is used
         #  ... but the tweets post time").
         nbins = duration_steps + 2
-        bin_sent_sum = np.zeros(nbins, dtype=np.float64)
-        bin_sent_cnt = np.zeros(nbins, dtype=np.int64)
+        bus = SignalBus(("sentiment",), bin_s=step, horizon_bins=nbins)
+        ctrl = ScalingController(
+            policy,
+            ControllerConfig(
+                adapt_period_s=cfg.adapt_period_s,
+                provision_delay_s=cfg.alloc_delay_s,
+                max_units=cfg.max_units,
+                step_s=step,
+                app_window_s=cfg.app_window_s,
+                signal_channel="sentiment",
+            ),
+            bus,
+            starting_units=cfg.starting_units,
+        )
 
-        units = cfg.starting_units
-        pending: list[tuple[float, int]] = []   # (available_at, count)
         units_hist: list[int] = []
         util_hist: list[float] = []
         insys_hist: list[int] = []
-        n_up = n_down = 0
-
-        # window accounting for Observation
-        win_busy: list[float] = []
-        win_arrivals = 0
 
         t_step = 0
         max_steps = duration_steps + 200_000   # drain guard
 
         while True:
             now = t_step * step
-            # ---- provisioning arrivals -------------------------------------------
-            if pending:
-                ready = [p for p in pending if p[0] <= now]
-                if ready:
-                    units += sum(c for _, c in ready)
-                    units = min(units, cfg.max_units)
-                    pending = [p for p in pending if p[0] > now]
+            units = ctrl.on_step_start(now)
 
             # ---- admit new tweets -------------------------------------------------
             if t_step < duration_steps:
@@ -203,9 +213,7 @@ class Engine:
                     delays_new = (now + step) - new_post[idx]
                     delays[n_done : n_done + idx.size] = delays_new
                     n_done += idx.size
-                    b = np.minimum(new_post[idx].astype(np.int64), nbins - 1)
-                    np.add.at(bin_sent_sum, b, new_sent[idx].astype(np.float64))
-                    np.add.at(bin_sent_cnt, b, 1)
+                    bus.record("sentiment", new_post[idx], new_sent[idx])
                     keep = ~zero
                     new_rem, new_post, new_sent = new_rem[keep], new_post[keep], new_sent[keep]
                 if new_rem.size:
@@ -215,7 +223,6 @@ class Engine:
                     rem = np.insert(rem, pos, new_rem)
                     post = np.insert(post, pos, new_post)
                     sent = np.insert(sent, pos, new_sent)
-            win_arrivals += new_hi - new_lo
 
             L = rem.shape[0]
             insys_hist.append(L + (n_arrived - q_head) if cfg.queue_in_system else L)
@@ -230,9 +237,7 @@ class Engine:
                     fin_sent = sent[:k_fin]
                     delays[n_done : n_done + k_fin] = (now + step) - fin_post
                     n_done += k_fin
-                    b = np.minimum(fin_post.astype(np.int64), nbins - 1)
-                    np.add.at(bin_sent_sum, b, fin_sent.astype(np.float64))
-                    np.add.at(bin_sent_cnt, b, 1)
+                    bus.record("sentiment", fin_post, fin_sent)
                     rem = rem[k_fin:]
                     post = post[k_fin:]
                     sent = sent[k_fin:]
@@ -245,40 +250,12 @@ class Engine:
                     util = min(1.0, demand / capacity) if capacity > 0 else 0.0
             else:
                 util = 0.0
-            win_busy.append(util)
             units_hist.append(units)
             util_hist.append(util)
 
-            # ---- adapt ------------------------------------------------------------
-            if (t_step + 1) % int(cfg.adapt_period_s / step) == 0:
-                w = int(cfg.app_window_s / step)
-                t_now = min(t_step + 1, nbins)
-                lo1, hi1 = max(t_now - w, 0), t_now
-                lo0, hi0 = max(t_now - 2 * w, 0), max(t_now - w, 0)
-                c1 = int(bin_sent_cnt[lo1:hi1].sum())
-                c0 = int(bin_sent_cnt[lo0:hi0].sum())
-                m1 = float(bin_sent_sum[lo1:hi1].sum() / c1) if c1 else 0.0
-                m0 = float(bin_sent_sum[lo0:hi0].sum() / c0) if c0 else 0.0
-                obs = Observation(
-                    time=now + step,
-                    n_units=units,
-                    n_pending=sum(c for _, c in pending),
-                    utilization=float(np.mean(win_busy)) if win_busy else 0.0,
-                    n_in_system=int(insys_hist[-1]),
-                    input_rate=win_arrivals / cfg.adapt_period_s,
-                    app_window_mean=m1,
-                    app_prev_window_mean=m0,
-                    app_window_count=c1,
-                )
-                d = policy.decide(obs)
-                if d.delta > 0:
-                    n_up += 1
-                    pending.append((now + step + cfg.alloc_delay_s, int(d.delta)))
-                elif d.delta < 0 and units > 1:
-                    n_down += 1
-                    units -= 1   # paper: "Downscaling is limited to a single CPU"
-                win_busy = []
-                win_arrivals = 0
+            # ---- adapt (Table III mechanics live in the shared controller) --------
+            ctrl.note_step(util, new_hi - new_lo)
+            ctrl.maybe_adapt(time=now + step, n_in_system=insys_hist[-1])
 
             t_step += 1
             done_with_arrivals = t_step >= duration_steps and q_head >= n_total
@@ -292,16 +269,19 @@ class Engine:
 
         units_arr = np.asarray(units_hist, dtype=np.int64)
         return SimResult(
-            match=tr.match.name,
+            backend="simulator",
+            workload=tr.match.name,
             policy=policy.describe(),
-            delays=delays[:n_done],
             sla_s=cfg.sla_s,
-            cpu_seconds=float(units_arr.sum() * step),
+            latencies=delays[:n_done],
+            unit_seconds=float(units_arr.sum() * step),
             units_t=units_arr,
+            n_decisions_up=ctrl.n_up,
+            n_decisions_down=ctrl.n_down,
+            unit_name="cpu",
+            decisions=ctrl.decision_log,
             util_t=np.asarray(util_hist, dtype=np.float32),
             in_system_t=np.asarray(insys_hist, dtype=np.int64),
-            n_decisions_up=n_up,
-            n_decisions_down=n_down,
         )
 
 

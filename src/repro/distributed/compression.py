@@ -16,6 +16,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 
@@ -64,12 +65,13 @@ def make_compressed_grad_fn(loss_fn, mesh):
         (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
         return loss, grads
 
-    # axis_names={'pod'}: the pod axis is manually mapped (we own what crosses
-    # pods); 'data'/'model' stay under the automatic SPMD partitioner.
-    @partial(jax.shard_map, mesh=mesh,
+    # Only the pod axis is manually mapped (we own what crosses pods);
+    # 'data'/'model' stay under the automatic SPMD partitioner via ``auto``.
+    @partial(shard_map, mesh=mesh,
              in_specs=(P(), P("pod"), P()),
              out_specs=(P(), P(), P()),
-             check_vma=False, axis_names={"pod"})
+             check_rep=False,
+             auto=frozenset(a for a in mesh.axis_names if a != "pod"))
     def fn(params, batch, error_state):
         loss, grads = local_grads(params, batch)
         grads, new_err = compress_allreduce_pod(grads, error_state)

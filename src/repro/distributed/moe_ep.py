@@ -23,6 +23,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.models.common import MoEConfig
@@ -41,12 +42,11 @@ def get_ep_mesh():
     return _EP_MESH
 
 
-def _local_moe(x, params, cfg: MoEConfig, model_axis: str):
+def _local_moe(x, params, cfg: MoEConfig, model_axis: str, mp: int):
     """Per-device body: x (T_loc, D) local tokens; params expert-sharded
-    (E_loc, D, F) on ``model_axis``."""
+    (E_loc, D, F) on ``model_axis``; ``mp`` = static model-axis size."""
     T, D = x.shape
     E, k = cfg.n_experts, cfg.top_k
-    mp = jax.lax.axis_size(model_axis)
     rank = jax.lax.axis_index(model_axis)
     E_loc = E // mp
     C = max(int(T * k * cfg.capacity_factor / E), min(4, T * k))
@@ -141,7 +141,7 @@ def moe_ffn_ep(x3d, params, cfg: MoEConfig, mesh):
         B, S, D = x_loc.shape
         xf = x_loc.reshape(B * S, D)
         if ep_mode:
-            out, aux = _local_moe(xf, p_loc, cfg, model_axis)
+            out, aux = _local_moe(xf, p_loc, cfg, model_axis, mp)
         else:
             out, aux = _local_moe_tp(xf, p_loc, cfg, model_axis)
         # aux is identical across model ranks (redundant routing) but differs per
@@ -159,11 +159,11 @@ def moe_ffn_ep(x3d, params, cfg: MoEConfig, mesh):
                    "w_up": P(None, None, "model"), "w_down": P(None, "model", None)}
 
     x_spec = P(daxes, None, None) if daxes else P(None, None, None)
-    fn = jax.shard_map(
+    fn = shard_map(
         body, mesh=mesh,
         in_specs=(x_spec, w_specs),
         out_specs=(x_spec, P()),
-        check_vma=False,
+        check_rep=False,
     )
     out, aux = fn(x3d, params)
     return out, jnp.mean(aux)

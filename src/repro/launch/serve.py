@@ -1,8 +1,16 @@
 """Serving driver: continuous-batching engine under a bursty request stream,
-with SLA accounting and straggler mitigation.
+with SLA accounting, straggler mitigation, and the scaling control plane
+driving decode-slot elasticity.
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --smoke \
-      --requests 40 --sla 20
+      --requests 40 --sla 20 --policy target
+
+The driver is a :class:`repro.core.scaling.ScalableBackend` over the *live*
+:class:`~repro.serving.ServingEngine` (real JAX prefill/decode): the unit of
+elasticity is a decode SLOT, provisioning delay models cache/compile warmup,
+and the ``output_score`` SignalBus channel carries each request's
+application-output signal.  Any registered policy (``--policy threshold``,
+``target``, ...) can manage the slot pool.
 
 Straggler mitigation: a slot whose request has produced no token for
 ``--stall-steps`` engine steps (a stuck replica shard / preempted host in
@@ -18,6 +26,116 @@ import time
 
 import jax
 import numpy as np
+
+from repro.core.scaling import (
+    ControllerConfig,
+    RunReport,
+    ScalingController,
+    SignalBus,
+    make_policy,
+)
+
+
+class DrainTimeout(RuntimeError):
+    """The virtual-time loop ran far past the horizon without draining."""
+
+
+class ServeBackend:
+    """ScalableBackend over a live ServingEngine (unit = decode slot)."""
+
+    def __init__(self, eng, requests, *, sla_s: float, horizon_s: float,
+                 policy=None, adapt_period_s: float = 5.0,
+                 provision_delay_s: float = 3.0, app_window_s: float = 10.0,
+                 starting_slots: int = 1, stall_steps: float = 50.0):
+        self.eng = eng
+        self.requests = sorted(requests, key=lambda r: r.arrival_s)
+        self.sla_s = sla_s
+        self.horizon_s = horizon_s
+        self.stall_steps = stall_steps
+        self.evictions = 0
+        if policy is None:
+            policy = make_policy("target")   # same default as the CLI path
+        self.controller = ScalingController(
+            policy,
+            ControllerConfig(
+                adapt_period_s=adapt_period_s,
+                provision_delay_s=provision_delay_s,
+                min_units=1,
+                max_units=eng.cfg.max_batch,
+                step_s=1.0,
+                app_window_s=app_window_s,
+                signal_channel="output_score",
+            ),
+            SignalBus(("output_score",), bin_s=1.0),
+            starting_units=starting_slots,
+        )
+
+    def run(self) -> RunReport:
+        eng, ctrl = self.eng, self.controller
+        bus = ctrl.bus
+        t = 0.0
+        head = 0
+        n_reported = 0                      # completed requests already on the bus
+        last_progress: dict[int, tuple[int, float]] = {}
+        units_hist: list[int] = []
+
+        while head < len(self.requests) or eng.n_in_system:
+            units = ctrl.on_step_start(t)
+            eng.slot_limit = units
+            new_arr = 0
+            while head < len(self.requests) and self.requests[head].arrival_s <= t:
+                eng.submit(self.requests[head])
+                head += 1
+                new_arr += 1
+            served = eng.step(now=t)   # slots that advanced, incl. ones that
+                                       # finished this step (active is already
+                                       # drained of them by now)
+            # straggler mitigation: evict slots that stopped producing tokens
+            for slot, req in list(eng.active.items()):
+                n_out = len(req.output)
+                if last_progress.get(req.rid, (-1, t))[0] == n_out:
+                    if t - last_progress[req.rid][1] > self.stall_steps:
+                        eng.active.pop(slot)
+                        req.output.clear()
+                        eng.submit(req)          # backup dispatch
+                        self.evictions += 1
+                        last_progress.pop(req.rid)
+                else:
+                    last_progress[req.rid] = (n_out, t)
+            # application-output signal, indexed by request arrival time (§V-B)
+            fresh = eng.completed[n_reported:]
+            if fresh:
+                bus.record("output_score",
+                           np.array([r.arrival_s for r in fresh]),
+                           np.array([r.score for r in fresh]))
+                for r in fresh:
+                    last_progress.pop(r.rid, None)
+                n_reported = len(eng.completed)
+            units_hist.append(units)
+            # served can exceed units right after a scale-in (old slots drain
+            # out); clamp so utilization keeps its busy-fraction contract
+            ctrl.note_step(min(1.0, served / max(units, 1)), new_arr)
+            ctrl.maybe_adapt(time=t + 1.0, n_in_system=eng.n_in_system)
+            t += 1.0
+            if t > self.horizon_s + 10_000:
+                raise DrainTimeout("serve backend failed to drain")
+
+        units_arr = np.asarray(units_hist, dtype=np.int64)
+        lat = np.array([r.done_s - r.arrival_s for r in eng.completed])
+        return RunReport(
+            backend="serve",
+            workload=f"{len(self.requests)} requests",
+            policy=ctrl.policy.describe(),
+            sla_s=self.sla_s,
+            latencies=lat,
+            unit_seconds=float(units_arr.sum()),
+            units_t=units_arr,
+            n_decisions_up=ctrl.n_up,
+            n_decisions_down=ctrl.n_down,
+            unit_name="slot",
+            decisions=ctrl.decision_log,
+            extra={"evictions": self.evictions, "engine_steps": eng.step_count},
+        )
 
 
 def serve(args) -> int:
@@ -37,47 +155,53 @@ def serve(args) -> int:
                             mean_decode=args.mean_decode,
                             burst_times=(args.horizon * 0.5,),
                             horizon_s=args.horizon)
-    reqs = [Request(rid=i, arrival_s=t,
+    score_rng = np.random.default_rng(args.seed + 1)
+    burst_t = args.horizon * 0.5
+    reqs = []
+    for i, (t, p, d) in enumerate(stream):
+        r = Request(rid=i, arrival_s=t,
                     prompt=np.random.default_rng(i).integers(
                         0, cfg.vocab, min(p, args.max_len // 2)).astype(np.int32),
                     max_new_tokens=max(min(d, args.max_len // 4), 1))
-            for i, (t, p, d) in enumerate(stream)]
+        # output-score signal leads the burst (breaking-news-shaped answers)
+        hot = burst_t - 10.0 <= t <= burst_t + 10.0
+        r.score = float(np.clip((0.9 if hot else 0.3)
+                                + score_rng.normal(0, 0.05), 0, 1))
+        reqs.append(r)
 
-    # virtual-time loop: 1 engine step == one decode tick
-    t = 0.0
-    head = 0
-    last_progress = {}
-    evictions = 0
+    from repro.core.scaling import available_policies
+    # policies whose observation tiers are meaningful for the slot backend:
+    # 'load' prices work in tweet-trace CPU cycles and 'scheduled' needs a
+    # schedule, neither of which the CLI can supply
+    supported = ("appdata", "target", "threshold")
+    if args.policy:
+        if args.policy not in available_policies():
+            print(f"[serve] unknown policy {args.policy!r}; registered: "
+                  f"{', '.join(available_policies())}", file=sys.stderr)
+            return 2
+        if args.policy not in supported:
+            print(f"[serve] policy {args.policy!r} is not usable on the slot "
+                  f"backend from the CLI; supported: {', '.join(supported)}",
+                  file=sys.stderr)
+            return 2
+    policy = make_policy(args.policy) if args.policy else None
+    backend = ServeBackend(eng, reqs, sla_s=args.sla, horizon_s=args.horizon,
+                           policy=policy, stall_steps=args.stall_steps)
     t0 = time.time()
-    while head < len(reqs) or eng.n_in_system:
-        while head < len(reqs) and reqs[head].arrival_s <= t:
-            eng.submit(reqs[head])
-            head += 1
-        eng.step(now=t)
-        # straggler mitigation: evict slots that stopped producing tokens
-        for slot, req in list(eng.active.items()):
-            n_out = len(req.output)
-            if last_progress.get(req.rid, (-1, t))[0] == n_out:
-                if t - last_progress[req.rid][1] > args.stall_steps:
-                    eng.active.pop(slot)
-                    req.output.clear()
-                    eng.submit(req)          # backup dispatch
-                    evictions += 1
-                    last_progress.pop(req.rid)
-            else:
-                last_progress[req.rid] = (n_out, t)
-        t += 1.0
-        if t > args.horizon + 10_000:
-            print("[serve] failed to drain", file=sys.stderr)
-            return 1
+    try:
+        rep = backend.run()
+    except DrainTimeout:
+        print("[serve] failed to drain", file=sys.stderr)
+        return 1
 
-    lat = np.array([r.done_s - r.arrival_s for r in eng.completed])
-    viol = float(np.mean(lat > args.sla)) if lat.size else 0.0
-    print(f"[serve] completed {len(eng.completed)}/{len(reqs)} requests in "
-          f"{eng.step_count} steps ({time.time() - t0:.1f}s wall)")
-    print(f"[serve] latency mean {lat.mean():.1f} p99 {np.quantile(lat, 0.99):.1f} "
-          f"(virtual s); SLA({args.sla}s) violations {100 * viol:.2f}%; "
-          f"stragglers evicted {evictions}")
+    print(f"[serve] completed {rep.n_done}/{len(reqs)} requests in "
+          f"{eng.step_count} steps ({time.time() - t0:.1f}s wall) "
+          f"under {rep.policy}")
+    print(f"[serve] latency mean {rep.mean_latency_s:.1f} "
+          f"p99 {rep.p99_latency_s:.1f} (virtual s); "
+          f"SLA({args.sla}s) violations {100 * rep.violation_rate:.2f}%; "
+          f"slots peak {rep.max_units}/{args.batch}; "
+          f"stragglers evicted {backend.evictions}")
     return 0
 
 
@@ -93,6 +217,9 @@ def main():
     ap.add_argument("--horizon", type=float, default=60.0)
     ap.add_argument("--sla", type=float, default=20.0)
     ap.add_argument("--stall-steps", type=float, default=50.0)
+    ap.add_argument("--policy", default=None,
+                    help="registered policy name (default: the backend's "
+                         "target-tracking rule; see repro.core.scaling)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     sys.exit(serve(args))

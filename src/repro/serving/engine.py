@@ -61,6 +61,9 @@ class ServingEngine:
         self.cfg = cfg
         self.queue: list[Request] = []
         self.active: dict[int, Request] = {}       # slot -> request
+        # dynamic cap on concurrently active slots (<= cfg.max_batch): the unit
+        # of elasticity the scaling control plane actuates on this engine
+        self.slot_limit: int = cfg.max_batch
         self.pos = np.zeros(cfg.max_batch, dtype=np.int32)
         self.remaining = np.zeros(cfg.max_batch, dtype=np.int32)
         self.cache = None
@@ -80,9 +83,10 @@ class ServingEngine:
 
     # -- scheduling ---------------------------------------------------------------
     def _fill_slots(self, now: float) -> None:
+        limit = min(self.slot_limit, self.cfg.max_batch)
         free = [s for s in range(self.cfg.max_batch) if s not in self.active]
         for slot in free:
-            if not self.queue:
+            if not self.queue or len(self.active) >= limit:
                 break
             req = self.queue.pop(0)
             toks = jnp.asarray(req.prompt, jnp.int32)[None]

@@ -113,6 +113,7 @@ def test_int8_pod_gradient_compression():
     out = _run("""
         import jax, jax.numpy as jnp, numpy as np
         from functools import partial
+        from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
         from repro.distributed.compression import (
             compress_allreduce_pod, init_error_state)
@@ -121,13 +122,14 @@ def test_int8_pod_gradient_compression():
         grads = {'w': jnp.linspace(-1, 1, 64).reshape(8, 8)}
         err = init_error_state(grads)
 
-        @partial(jax.shard_map, mesh=mesh, in_specs=(P(), P()),
-                 out_specs=(P(), P()), check_vma=False, axis_names={'pod'})
+        @partial(shard_map, mesh=mesh, in_specs=(P(), P()),
+                 out_specs=(P(), P()), check_rep=False,
+                 auto=frozenset({'data', 'model'}))
         def f(g, e):
             return compress_allreduce_pod(g, e)
 
-        jax.sharding.set_mesh(mesh)     # partial-auto shard_map needs the mesh context
-        red, new_err = jax.jit(f)(grads, err)
+        with mesh:                      # partial-auto shard_map needs the mesh context
+            red, new_err = jax.jit(f)(grads, err)
         # identical replicas => reduction == original up to int8 error
         q_err = float(jnp.abs(red['w'] - grads['w']).max())
         assert q_err < 2.0 / 127.0, q_err

@@ -1,0 +1,400 @@
+"""Scaling control-plane tests: SignalBus window math, ScalingController
+Table III mechanics, multi-channel signals, the RunReport schema, and a
+bit-for-bit parity check against the pre-refactor simulator results."""
+import numpy as np
+import pytest
+
+from repro.core.autoscaler import (
+    AppDataPolicy,
+    CompositePolicy,
+    Decision,
+    LoadPolicy,
+    Observation,
+    Policy,
+    ScheduledPolicy,
+    TargetTrackingPolicy,
+    ThresholdPolicy,
+)
+from repro.core.scaling import (
+    ControllerConfig,
+    RunReport,
+    ScalableBackend,
+    ScalingController,
+    SignalBus,
+    WindowStats,
+    available_policies,
+    make_policy,
+)
+from repro.core.simulator import SimConfig, generate_trace, run_scenario
+from repro.core.simulator.distributions import ServiceModel
+
+
+# ---------------------------------------------------------------------------------
+# Parity: the refactored Engine (SignalBus + ScalingController) must reproduce the
+# seed simulator bit-for-bit.  Golden values captured from the pre-refactor engine
+# at commit 09bf04d on generate_trace("england", seed=0) / ("mexico", seed=1).
+# ---------------------------------------------------------------------------------
+
+GOLDEN_ENGLAND = {
+    # policy -> (violation_rate, cpu_seconds, n_up, n_down, delays_sum,
+    #            units_t_sum, units_t_max)
+    "threshold": (0.0, 12072.0, 10, 10, 334050.6924178286, 12072, 4),
+    "load": (5.411226129728735e-06, 10332.0, 5, 5, 3432095.6924178284, 10332, 4),
+    "load+appdata": (2.7056130648643674e-06, 12552.0, 6, 15,
+                     3094931.6924178284, 12552, 8),
+}
+GOLDEN_MEXICO_CAPPED = (0.00010689349682639686, 15512.0, 10, 16,
+                        10585666.145966608, 15512, 4)
+
+
+def _fingerprint(r):
+    return (r.violation_rate, r.cpu_seconds, r.n_decisions_up, r.n_decisions_down,
+            float(r.delays.sum()), int(r.units_t.sum()), int(r.units_t.max()))
+
+
+def test_engine_parity_with_seed_simulator():
+    sm = ServiceModel()
+    tr = generate_trace("england", seed=0)
+    cfg = SimConfig()
+    policies = {
+        "threshold": lambda: ThresholdPolicy(0.9),
+        "load": lambda: LoadPolicy(sm, quantile=0.99999),
+        "load+appdata": lambda: CompositePolicy(
+            [LoadPolicy(sm, quantile=0.99999), AppDataPolicy(extra_units=5)]),
+    }
+    for name, golden in GOLDEN_ENGLAND.items():
+        r = run_scenario(tr, policies[name](), cfg)
+        assert _fingerprint(r) == golden, name
+
+
+def test_engine_parity_with_input_rate_cap():
+    """The capped-admission path (ingest queue) must also match the seed."""
+    sm = ServiceModel()
+    tr = generate_trace("mexico", seed=1)
+    pol = CompositePolicy([LoadPolicy(sm, quantile=0.999),
+                           AppDataPolicy(extra_units=3)])
+    r = run_scenario(tr, pol, SimConfig(max_input_rate=600.0))
+    assert _fingerprint(r) == GOLDEN_MEXICO_CAPPED
+
+
+def test_elastic_backend_golden_regression():
+    """Pin the elastic backend's behavior on a fixed workload (captured after
+    the control-plane migration; identical to the seed implementation on this
+    workload, see DESIGN.md migration notes on the window-edge unification)."""
+    from repro.core.elastic import ClusterConfig, ElasticCluster, ServeRequest
+    rng = np.random.default_rng(0)
+    reqs = []
+    for sec in range(300):
+        for _ in range(rng.poisson(3.0 if 100 < sec < 160 else 1.0)):
+            hot = 80 < sec < 160
+            reqs.append(ServeRequest(
+                rid=len(reqs), arrival_s=sec + rng.random(),
+                prefill_len=int(rng.exponential(2000)) + 128,
+                decode_len=int(rng.exponential(64)) + 8,
+                score=float(np.clip((0.9 if hot else 0.3)
+                                    + rng.normal(0, .05), 0, 1))))
+    pol = CompositePolicy([ThresholdPolicy(0.7), AppDataPolicy(extra_units=2)])
+    res = ElasticCluster(ClusterConfig(), pol, reqs).run()
+    assert res["n_done"] == 406
+    assert res["violation_rate"] == 0.0
+    assert res["mean_latency_s"] == pytest.approx(1.928130771572525)
+    assert res["replica_hours"] == pytest.approx(0.1225)
+    assert res["max_replicas"] == 4
+    assert (res["n_scale_ups"], res["n_scale_downs"]) == (4, 5)
+
+
+# ---------------------------------------------------------------------------------
+# SignalBus window math
+# ---------------------------------------------------------------------------------
+
+def test_signalbus_window_means():
+    bus = SignalBus(("s",), bin_s=1.0)
+    # previous window [0, 10): mean 0.2; current window [10, 20): mean 0.8
+    bus.record("s", np.arange(0.0, 10.0), np.full(10, 0.2))
+    bus.record("s", np.arange(10.0, 20.0), np.full(10, 0.8))
+    st = bus.window_stats("s", hi_bin=20, window_bins=10)
+    assert st.mean == pytest.approx(0.8)
+    assert st.prev_mean == pytest.approx(0.2)
+    assert st.count == 10 and st.prev_count == 10
+    assert st.rise == pytest.approx(0.6)
+    assert st.relative_rise == pytest.approx(3.0)
+
+
+def test_signalbus_empty_windows_and_clamping():
+    bus = SignalBus(("s",), bin_s=1.0)
+    assert bus.window_stats("s", hi_bin=5, window_bins=10) == WindowStats()
+    bus.record("s", np.array([2.0]), np.array([1.0]))
+    # window reaching below t=0 clamps instead of wrapping
+    st = bus.window_stats("s", hi_bin=3, window_bins=10)
+    assert st.count == 1 and st.mean == pytest.approx(1.0)
+    assert st.prev_count == 0 and st.prev_mean == 0.0
+
+
+def test_signalbus_grows_on_demand_and_respects_horizon():
+    bus = SignalBus(("s",), bin_s=1.0)
+    bus.record("s", np.array([10_000.0]), np.array([0.5]))   # force growth
+    assert bus.window_stats("s", 10_001, 1).count == 1
+    capped = SignalBus(("s",), bin_s=1.0, horizon_bins=100)
+    capped.record("s", np.array([500.0]), np.array([1.0]))   # clamps into last bin
+    st = capped.window_stats("s", hi_bin=10_000, window_bins=10)  # hi clamps to 100
+    assert st.count == 1
+
+
+def test_signalbus_window_beyond_allocated_bins_is_empty():
+    """An unbounded bus must not slide the window back onto stale data when
+    queried past the last-grown bin (regression: hi was clamped to array len)."""
+    bus = SignalBus(("s",), bin_s=1.0)
+    bus.record("s", np.arange(200.0, 256.0), np.full(56, 0.9))
+    st = bus.window_stats("s", hi_bin=400, window_bins=60)   # window [340, 400)
+    assert st.count == 0 and st.mean == 0.0
+    assert st.prev_count == 0 and st.prev_mean == 0.0
+    # partially-past window still sees only what falls inside it
+    st = bus.window_stats("s", hi_bin=300, window_bins=60)   # [240, 300)
+    assert st.count == 16
+
+
+def test_signalbus_multi_channel_isolation():
+    bus = SignalBus(("a",), bin_s=1.0)
+    bus.record("a", np.array([1.0]), np.array([1.0]))
+    bus.record("b", np.array([1.0]), np.array([3.0]))        # auto-registered
+    snap = bus.snapshot(hi_bin=2, window_bins=2)
+    assert set(snap) == {"a", "b"}
+    assert snap["a"].mean == pytest.approx(1.0)
+    assert snap["b"].mean == pytest.approx(3.0)
+
+
+def test_signalbus_cumulative_matches_slices():
+    rng = np.random.default_rng(0)
+    bus = SignalBus(("s",), bin_s=1.0)
+    times = rng.uniform(0, 50, size=200)
+    vals = rng.random(200)
+    bus.record("s", times, vals)
+    csum, ccnt = bus.cumulative("s")
+    for lo, hi in [(0, 10), (5, 30), (20, 50)]:
+        st = bus.window_stats("s", hi_bin=hi, window_bins=hi - lo)
+        n = ccnt[hi] - ccnt[lo]
+        assert st.count == n
+        if n:
+            assert st.mean == pytest.approx((csum[hi] - csum[lo]) / n)
+
+
+# ---------------------------------------------------------------------------------
+# ScalingController mechanics (Table III)
+# ---------------------------------------------------------------------------------
+
+class _Script(Policy):
+    """Replays a scripted sequence of deltas, one per adaptation tick."""
+    name = "script"
+
+    def __init__(self, deltas):
+        self.deltas = list(deltas)
+        self.i = 0
+
+    def reset(self):
+        self.i = 0
+
+    def decide(self, obs):
+        d = self.deltas[self.i] if self.i < len(self.deltas) else 0
+        self.i += 1
+        return Decision(d, f"scripted {d}")
+
+
+def _drive(ctrl, n_steps, *, step_s=1.0, busy=0.5, arrivals=0, n_in_system=0):
+    units = []
+    for k in range(n_steps):
+        u = ctrl.on_step_start(k * step_s)
+        units.append(u)
+        ctrl.note_step(busy, arrivals)
+        ctrl.maybe_adapt(time=(k + 1) * step_s, n_in_system=n_in_system)
+    return units
+
+
+def test_provisioning_delay_queue():
+    cfg = ControllerConfig(adapt_period_s=10.0, provision_delay_s=30.0)
+    ctrl = ScalingController(_Script([5]), cfg)
+    units = _drive(ctrl, 60)
+    # decision at t=10 -> available at t=40: first step that sees 6 is t=40
+    assert units[39] == 1 and units[40] == 6
+    assert ctrl.n_up == 1
+    rec = ctrl.decision_log[0]
+    assert rec.requested == 5 and rec.applied == 5 and rec.pending == 5
+
+
+def test_downscale_cap_and_floor():
+    cfg = ControllerConfig(adapt_period_s=10.0, provision_delay_s=0.0)
+    ctrl = ScalingController(_Script([4, -3, -3, -3, -3, -3]), cfg)
+    units = _drive(ctrl, 70)
+    arr = np.asarray(units)
+    assert arr.max() == 5
+    assert np.diff(arr).min() >= -1          # one unit at a time, ever
+    assert arr[-1] == 1 and ctrl.units == 1  # floor respected
+    # the -3 request against units=2 applies only -1
+    applied = [r.applied for r in ctrl.decision_log]
+    assert all(a >= -1 for a in applied)
+
+
+def test_max_units_ceiling():
+    cfg = ControllerConfig(adapt_period_s=5.0, provision_delay_s=5.0, max_units=3)
+    ctrl = ScalingController(_Script([10]), cfg)
+    units = _drive(ctrl, 30)
+    assert max(units) == 3
+
+
+def test_observation_window_accounting():
+    cfg = ControllerConfig(adapt_period_s=4.0, app_window_s=4.0, signal_channel="s")
+    ctrl = ScalingController(_Script([0] * 10), cfg,
+                             SignalBus(("s",), bin_s=1.0))
+    for k in range(8):
+        ctrl.on_step_start(float(k))
+        ctrl.bus.record("s", np.array([float(k)]), np.array([1.0 if k >= 4 else 0.5]))
+        ctrl.note_step(busy_fraction=0.25 * (k % 4), new_arrivals=2)
+        ctrl.maybe_adapt(time=k + 1.0, n_in_system=7)
+    obs = ctrl.observe(time=8.0, n_in_system=7)
+    # windows over [4, 8) vs [0, 4)
+    assert obs.app_window_mean == pytest.approx(1.0)
+    assert obs.app_prev_window_mean == pytest.approx(0.5)
+    assert obs.signal("s").prev_count == 4
+    assert obs.input_rate == pytest.approx(0.0)   # reset at the adapt tick
+    assert obs.n_in_system == 7
+
+
+def test_legacy_observation_shim():
+    """Policies reading obs.signal(None) see the legacy app_* fields."""
+    obs = Observation(time=0, n_units=1, n_pending=0, utilization=0.5,
+                      n_in_system=3, input_rate=1.0,
+                      app_window_mean=0.9, app_prev_window_mean=0.4,
+                      app_window_count=50)
+    st = obs.signal()
+    assert st.mean == 0.9 and st.prev_mean == 0.4 and st.count == 50
+    assert obs.signal("missing") == WindowStats()
+
+
+# ---------------------------------------------------------------------------------
+# Multi-channel signal path through a real backend
+# ---------------------------------------------------------------------------------
+
+def _cluster_requests(n=1500, horizon=300.0, burst_at=150.0, seed=0):
+    from repro.core.elastic import ServeRequest
+    rng = np.random.default_rng(seed)
+    out = []
+    for sec in range(int(horizon)):
+        lam = 1.0 + 4.0 * np.exp(-((sec - burst_at) ** 2) / (2 * 20.0 ** 2))
+        for _ in range(rng.poisson(lam * n / (horizon * 2.0))):
+            hot = burst_at - 70 <= sec <= burst_at + 40
+            out.append(ServeRequest(
+                rid=len(out), arrival_s=sec + rng.random(),
+                prefill_len=int(rng.exponential(2000)) + 128,
+                decode_len=int(rng.exponential(64)) + 8,
+                score=0.5,
+                signals={"breaking_news": 1.0 if (hot and rng.random() < 0.9)
+                         else 0.0}))
+    return out
+
+
+def test_cluster_multi_channel_appdata():
+    """An AppDataPolicy watching a secondary channel (not the primary
+    output_score, which stays flat here) pre-provisions on its rise."""
+    from repro.core.elastic import ClusterConfig, ElasticCluster
+    cfg = ClusterConfig()
+    reqs = _cluster_requests()
+    base = ElasticCluster(cfg, ThresholdPolicy(0.7), _cluster_requests()).run()
+    pol = CompositePolicy([
+        ThresholdPolicy(0.7),
+        AppDataPolicy(extra_units=4, jump=0.5, relative=False,
+                      channel="breaking_news"),
+    ])
+    res = ElasticCluster(cfg, pol, reqs).run()
+    assert res.max_units > base.max_units          # the channel actually fired
+    assert any("breaking_news" in r.reason for r in res.decisions)
+    # flat primary channel alone would never have fired (jump 0.6 also clears
+    # the cold-start edge where an empty previous window reads as prev_mean=0)
+    flat = AppDataPolicy(extra_units=4, jump=0.6, relative=False)
+    only = ElasticCluster(cfg, CompositePolicy([ThresholdPolicy(0.7), flat]),
+                          _cluster_requests()).run()
+    assert not any("signal" in r.reason for r in only.decisions)
+
+
+# ---------------------------------------------------------------------------------
+# RunReport schema + backend protocol
+# ---------------------------------------------------------------------------------
+
+def test_runreport_schema_and_mapping_shim():
+    rep = RunReport(backend="x", workload="w", policy="p", sla_s=10.0,
+                    latencies=np.array([1.0, 5.0, 20.0]), unit_seconds=3600.0,
+                    units_t=np.array([1, 2, 3]), unit_name="replica",
+                    extra={"chip_hours": 16.0})
+    assert rep.violation_rate == pytest.approx(1 / 3)
+    assert rep.unit_hours == pytest.approx(1.0)
+    assert rep["replica_hours"] == pytest.approx(1.0)     # unit-named alias
+    assert rep["max_replicas"] == 3 and rep.max_units == 3
+    assert rep["chip_hours"] == 16.0                      # extra rows pass through
+    assert rep["n_done"] == 3
+    assert "violation_rate" in rep
+
+
+def test_backends_satisfy_protocol_and_share_schema():
+    from repro.core.elastic import ClusterConfig, ElasticCluster
+    from repro.core.simulator.engine import Engine
+    sim = Engine(generate_trace("england", seed=0), ThresholdPolicy(0.9))
+    clu = ElasticCluster(ClusterConfig(), ThresholdPolicy(0.7),
+                         _cluster_requests(300))
+    assert isinstance(sim, ScalableBackend)
+    assert isinstance(clu, ScalableBackend)
+    rep = clu.run()
+    assert isinstance(rep, RunReport)
+    assert {"backend", "policy", "violation_rate", "n_scale_ups"} <= set(rep.keys())
+
+
+# ---------------------------------------------------------------------------------
+# New policies + registry
+# ---------------------------------------------------------------------------------
+
+def _obs(**kw):
+    base = dict(time=0.0, n_units=2, n_pending=0, utilization=0.5,
+                n_in_system=0, input_rate=0.0)
+    base.update(kw)
+    return Observation(**base)
+
+
+def test_target_tracking_scales_proportionally():
+    pol = TargetTrackingPolicy(target=0.5)
+    assert pol.decide(_obs(utilization=1.0)).delta == 2   # 2 * 1.0/0.5 = 4 desired
+    assert pol.decide(_obs(utilization=0.5)).delta == 0   # on target
+    assert pol.decide(_obs(utilization=0.1)).delta == -1  # scale-in, one at a time
+    # dead band suppresses flapping near the target
+    assert pol.decide(_obs(utilization=0.52)).delta == 0
+    # utilization comes from live units only: 2 saturated units imply a load of
+    # 2 unit-equivalents -> desired 4, already covered by the 2 pending units
+    assert pol.decide(_obs(utilization=1.0, n_pending=2)).delta == 0
+    assert pol.decide(_obs(utilization=1.0, n_pending=1)).delta == 1
+    # excess pending (e.g. queued by a co-composed policy) must not trigger a
+    # scale-in while the live units still run above target
+    assert pol.decide(_obs(utilization=1.0, n_pending=4)).delta == 0
+
+
+def test_target_tracking_on_signal_channel():
+    pol = TargetTrackingPolicy(target=0.5, metric="signal", channel="load_score")
+    obs = _obs(signals={"load_score": WindowStats(mean=1.0, count=10)})
+    assert pol.decide(obs).delta == 2
+
+
+def test_scheduled_policy_preprovisions_with_lead():
+    pol = ScheduledPolicy([(100.0, 200.0, 6)], lead_s=60.0)
+    assert pol.decide(_obs(time=30.0)).delta == 0         # too early
+    assert pol.decide(_obs(time=40.0)).delta == 4         # 100 - 60 lead
+    assert pol.decide(_obs(time=150.0, n_units=6)).delta == 0
+    assert pol.decide(_obs(time=250.0)).delta == 0        # window over
+
+
+def test_policy_registry():
+    names = available_policies()
+    assert {"threshold", "load", "appdata", "target", "scheduled"} <= set(names)
+    assert make_policy("threshold", upper=0.8).describe() == "threshold(80%)"
+    assert make_policy("load").describe().startswith("load(")
+    assert make_policy("target", target=0.6).describe() == "target(utilization=0.6)"
+    assert make_policy("scheduled",
+                       schedule=[(0.0, 60.0, 2)]).describe() == "scheduled(1 windows)"
+    with pytest.raises(ValueError, match="schedule"):
+        make_policy("scheduled")          # helpful error, not a bare TypeError
+    with pytest.raises(KeyError):
+        make_policy("nope")

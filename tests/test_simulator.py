@@ -2,7 +2,8 @@
 conservation, Little's-law calibration, controller mechanics."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core.autoscaler import LoadPolicy, ThresholdPolicy
 from repro.core.autoscaler.base import Decision, Observation, Policy
