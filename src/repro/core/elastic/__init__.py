@@ -1,10 +1,11 @@
 from repro.core.elastic.cluster import (
     ClusterConfig,
     ElasticCluster,
+    ElasticResult,
     ReplicaSpec,
     ServeRequest,
 )
 from repro.core.elastic.remesh import elastic_remesh_plan, remesh_params
 
-__all__ = ["ClusterConfig", "ElasticCluster", "ReplicaSpec", "ServeRequest",
-           "elastic_remesh_plan", "remesh_params"]
+__all__ = ["ClusterConfig", "ElasticCluster", "ElasticResult", "ReplicaSpec",
+           "ServeRequest", "elastic_remesh_plan", "remesh_params"]

@@ -23,7 +23,13 @@ parameter resharding) is real JAX, exercised by `remesh.py` + tests.
 
 Table III mechanics and window accounting are delegated to the shared
 :class:`repro.core.scaling.ScalingController`/:class:`SignalBus` control
-plane; this module only models the replica fleet's service process.  The
+plane, and the service process itself is the shared exact water-filling core
+(:class:`repro.core.scaling.ServiceProcess`) -- the same Algorithm 1
+machinery the tweet simulator runs on, so policy comparisons across backends
+sit on an identical service model.  Admission is slot-capped from an
+index-head queue (O(1) per admit, 100k+-request streams are cheap) and the
+reported busy fraction is derived from work actually *consumed*
+(``min(demand, capacity) / capacity``), not from pre-step demand.  The
 primary signal channel is ``output_score`` (windowed mean score of generated
 answers); requests may carry additional named channels in ``signals`` (e.g. a
 refusal-rate or topic-shift stream), all observable by policies via
@@ -41,6 +47,7 @@ from repro.core.scaling import (
     ControllerConfig,
     RunReport,
     ScalingController,
+    ServiceProcess,
     SignalBus,
 )
 
@@ -87,31 +94,81 @@ class ClusterConfig:
 
 class _ClassModel:
     """A-priori (prefill+decode cost) distribution over request classes --
-    the `load` policy's quantile service model."""
+    the `load` policy's quantile service model.
+
+    The sorted sample array is cached between adapt ticks (quantiles are read
+    every tick, samples only change on observe), so `quantile_seconds` is an
+    O(1) interpolation instead of an O(n log n) re-sort of up to 50k samples.
+    """
 
     def __init__(self, spec: ReplicaSpec):
         self.spec = spec
         self._samples: list[float] = []
+        self._sorted: np.ndarray | None = None   # invalidated on observe
+
+    def _trim(self):
+        # a bulk observe can overshoot by more than 2x: keep halving (drop
+        # oldest first) until the retained set is back under the cap
+        while len(self._samples) > 50_000:
+            del self._samples[: len(self._samples) // 2]
+        self._sorted = None
 
     def observe(self, req: ServeRequest):
         self._samples.append(self.seconds_of(req))
-        if len(self._samples) > 50_000:
-            del self._samples[: len(self._samples) // 2]
+        self._trim()
+
+    def observe_seconds(self, seconds: np.ndarray):
+        """Vectorized observe of pre-priced service times."""
+        self._samples.extend(np.asarray(seconds, dtype=np.float64).tolist())
+        self._trim()
 
     def seconds_of(self, req: ServeRequest) -> float:
         s = self.spec
         return req.work_prefill() / s.prefill_tokens_per_s \
             + req.work_decode() / (s.decode_tokens_per_s / s.max_slots)
 
+    def price(self, prefill_len: np.ndarray, decode_len: np.ndarray) -> np.ndarray:
+        """Vectorized `seconds_of` over per-request length arrays."""
+        s = self.spec
+        return (np.asarray(prefill_len, np.float64) / s.prefill_tokens_per_s
+                + np.asarray(decode_len, np.float64)
+                / (s.decode_tokens_per_s / s.max_slots))
+
     def quantile_seconds(self, q: float) -> float:
         if not self._samples:
             return 1.0
-        return float(np.quantile(np.asarray(self._samples), q))
+        if self._sorted is None:
+            self._sorted = np.sort(np.asarray(self._samples, dtype=np.float64))
+        s = self._sorted
+        # linear interpolation at rank q * (n - 1): matches np.quantile's
+        # default method on the same samples
+        pos = q * (s.size - 1)
+        lo = int(math.floor(pos))
+        hi = min(lo + 1, s.size - 1)
+        return float(s[lo] + (s[hi] - s[lo]) * (pos - lo))
 
     def mean_seconds(self) -> float:
         if not self._samples:
             return 1.0
         return float(np.mean(self._samples))
+
+
+@dataclass
+class ElasticResult(RunReport):
+    """Elastic RunReport + the per-step service-process series the
+    conservation tests and utilization figures need (not part of the summary
+    row schema)."""
+
+    util_t: np.ndarray = field(                      # consumed/capacity per step
+        default_factory=lambda: np.empty(0, np.float32))
+    demand_t: np.ndarray = field(                    # pre-step demand, replica-s
+        default_factory=lambda: np.empty(0, np.float64))
+    consumed_t: np.ndarray = field(                  # work consumed, replica-s
+        default_factory=lambda: np.empty(0, np.float64))
+    capacity_t: np.ndarray = field(                  # usable capacity, replica-s
+        default_factory=lambda: np.empty(0, np.float64))
+    in_system_t: np.ndarray = field(                 # queue + in-flight per step
+        default_factory=lambda: np.empty(0, np.int64))
 
 
 class ElasticCluster:
@@ -123,9 +180,23 @@ class ElasticCluster:
         self.cfg = cfg
         self.policy = policy
         self.incoming = sorted(requests, key=lambda r: r.arrival_s)
+        n = len(self.incoming)
+        # struct-of-arrays view of the request stream (vectorized service core)
+        self._arrival = np.array([r.arrival_s for r in self.incoming],
+                                 dtype=np.float64)
+        self._score = np.array([r.score for r in self.incoming],
+                               dtype=np.float64)
         self.class_model = _ClassModel(cfg.replica)
-        for r in self.incoming:
-            self.class_model.observe(r)   # a-priori knowledge (training data)
+        self._work = self.class_model.price(
+            np.array([r.prefill_len for r in self.incoming], dtype=np.float64),
+            np.array([r.decode_len for r in self.incoming], dtype=np.float64))
+        # extra named channels as dense columns (NaN where a request doesn't
+        # carry the channel)
+        self._extra: dict[str, np.ndarray] = {}
+        for i, r in enumerate(self.incoming):
+            for name, val in r.signals.items():
+                self._extra.setdefault(name, np.full(n, np.nan))[i] = val
+        self.class_model.observe_seconds(self._work)   # a-priori knowledge
 
     # -- the load policy's expected-drain estimator --------------------------------
     def expected_delay(self, n_in_system: int, replicas: int, q: float) -> float:
@@ -150,79 +221,85 @@ class ElasticCluster:
             bus,
             starting_units=cfg.starting_replicas,
         )
-        t = 0.0
-        heads = 0
-        # explicit work accounting: the queue and slots carry (remaining service
-        # seconds, request) pairs priced by the class model at arrival
-        queue: list[tuple[float, ServeRequest]] = []
-        inflight: list[list] = []     # [remaining_work_s, req]
-        done: list[ServeRequest] = []
-        replica_seconds = 0.0
-        hist_replicas = []
+        n = len(self.incoming)
+        arrival, work, score = self._arrival, self._work, self._score
 
-        horizon = self.incoming[-1].arrival_s + 1.0 if self.incoming else 1.0
+        # shared water-filling service core; the sorted in-flight arrays carry
+        # the request index plus (arrival, score) payload columns
+        proc = ServiceProcess({"idx": np.int64,
+                               "arrival": np.float64,
+                               "score": np.float64})
+        t = 0.0
+        n_arrived = 0     # requests with arrival_s <= t (entered the system)
+        q_head = 0        # index-head queue: next request not yet in a slot
+        done_t = np.zeros(n, dtype=np.float64)
+        replica_seconds = 0.0
+        hist_replicas: list[int] = []
+        util_hist: list[float] = []
+        demand_hist: list[float] = []
+        consumed_hist: list[float] = []
+        capacity_hist: list[float] = []
+        insys_hist: list[int] = []
+
+        horizon = float(arrival[-1]) + 1.0 if n else 1.0
         while True:
             replicas = ctrl.on_step_start(t)
-            # arrivals
-            new_arr = 0
-            while heads < len(self.incoming) and self.incoming[heads].arrival_s <= t:
-                r = self.incoming[heads]
-                queue.append((self.class_model.seconds_of(r), r))
-                heads += 1
-                new_arr += 1
-            # admit into slots
+            # arrivals (arrival-sorted, so the queue is the contiguous index
+            # range [q_head, n_arrived))
+            hi = int(np.searchsorted(arrival, t, side="right"))
+            new_arr = hi - n_arrived
+            n_arrived = hi
+            # slot-capped admission from the queue head, FIFO
             capacity_slots = replicas * cfg.replica.max_slots
-            while queue and len(inflight) < capacity_slots:
-                work, r = queue.pop(0)
-                inflight.append([work, r])
-            # serve: processor sharing of replica-seconds across in-flight
-            finished: list[ServeRequest] = []
-            if inflight:
-                capacity = replicas * cfg.step_s
-                demand = sum(item[0] for item in inflight)
-                busy = min(1.0, demand / capacity)
-                share = capacity / len(inflight)
-                nxt = []
-                for item in inflight:
-                    item[0] -= share
-                    if item[0] <= 0.0:
-                        req = item[1]
-                        req.done_s = t + cfg.step_s
-                        done.append(req)
-                        finished.append(req)
-                    else:
-                        nxt.append(item)
-                inflight = nxt
-            else:
-                busy = 0.0
-            if finished:
+            k_adm = min(max(capacity_slots - len(proc), 0), n_arrived - q_head)
+            instant = None
+            if k_adm > 0:
+                idx = np.arange(q_head, q_head + k_adm, dtype=np.int64)
+                instant = proc.admit(work[idx], idx=idx,
+                                     arrival=arrival[idx], score=score[idx])
+                q_head += k_adm
+            # serve: exact water-filling of replica-seconds across in-flight
+            capacity = replicas * cfg.step_s
+            sr = proc.step(capacity)
+            fin_idx = sr.finished["idx"]
+            fin_arr = sr.finished["arrival"]
+            fin_score = sr.finished["score"]
+            if instant is not None:       # zero-work requests finish instantly
+                fin_idx = np.concatenate([instant["idx"], fin_idx])
+                fin_arr = np.concatenate([instant["arrival"], fin_arr])
+                fin_score = np.concatenate([instant["score"], fin_score])
+            if fin_idx.size:
+                done_t[fin_idx] = t + cfg.step_s
                 # signals indexed by ARRIVAL time (§V-B post-time indexing)
-                arr = np.array([req.arrival_s for req in finished])
-                bus.record(cfg.signal_channel,
-                           arr, np.array([req.score for req in finished]))
-                extra_channels: dict[str, list[tuple[float, float]]] = {}
-                for req in finished:
-                    for name, val in req.signals.items():
-                        extra_channels.setdefault(name, []).append((req.arrival_s, val))
-                for name, pairs in extra_channels.items():
-                    ts, vs = zip(*pairs)
-                    bus.record(name, np.array(ts), np.array(vs))
+                bus.record(cfg.signal_channel, fin_arr, fin_score)
+                for name, col in self._extra.items():
+                    vals = col[fin_idx]
+                    carried = ~np.isnan(vals)
+                    if carried.any():
+                        bus.record(name, fin_arr[carried], vals[carried])
             replica_seconds += replicas * cfg.step_s
             hist_replicas.append(replicas)
+            util_hist.append(sr.busy)
+            demand_hist.append(sr.demand)
+            consumed_hist.append(sr.consumed)
+            capacity_hist.append(capacity)
+            insys_hist.append((n_arrived - q_head) + len(proc))
 
-            ctrl.note_step(busy, new_arr)
-            ctrl.maybe_adapt(time=t, n_in_system=len(queue) + len(inflight))
+            ctrl.note_step(sr.busy, new_arr)
+            ctrl.maybe_adapt(time=t, n_in_system=insys_hist[-1])
 
             t += cfg.step_s
-            if t > horizon and not queue and not inflight and heads >= len(self.incoming):
+            if t > horizon and len(proc) == 0 and q_head >= n:
                 break
             if t > horizon + 48 * 3600:
                 raise RuntimeError("cluster failed to drain")
 
-        lat = np.array([r.done_s - r.arrival_s for r in done])
-        return RunReport(
+        for i, r in enumerate(self.incoming):     # keep the request-object API
+            r.done_s = float(done_t[i]) if done_t[i] > 0.0 else None
+        lat = (done_t - arrival)[done_t > 0.0]
+        return ElasticResult(
             backend="elastic",
-            workload=f"{len(self.incoming)} requests",
+            workload=f"{n} requests",
             policy=self.policy.describe(),
             sla_s=cfg.sla_s,
             latencies=lat,
@@ -233,7 +310,13 @@ class ElasticCluster:
             unit_name="replica",
             decisions=ctrl.decision_log,
             extra={"chip_hours": replica_seconds * cfg.replica.chips / 3600.0},
+            util_t=np.asarray(util_hist, dtype=np.float32),
+            demand_t=np.asarray(demand_hist, dtype=np.float64),
+            consumed_t=np.asarray(consumed_hist, dtype=np.float64),
+            capacity_t=np.asarray(capacity_hist, dtype=np.float64),
+            in_system_t=np.asarray(insys_hist, dtype=np.int64),
         )
 
 
-__all__ = ["ClusterConfig", "ElasticCluster", "ReplicaSpec", "ServeRequest"]
+__all__ = ["ClusterConfig", "ElasticCluster", "ElasticResult", "ReplicaSpec",
+           "ServeRequest"]

@@ -1,12 +1,14 @@
 """The scaling control plane: monitoring (SignalBus), decision/actuation
-(ScalingController), and the backend/result contract (ScalableBackend,
-RunReport) every scaled system shares.  See DESIGN.md."""
+(ScalingController), the shared water-filling service core (ServiceProcess),
+and the backend/result contract (ScalableBackend, RunReport) every scaled
+system shares.  See DESIGN.md."""
 from repro.core.scaling.signals import DEFAULT_CHANNEL, SignalBus, WindowStats
 from repro.core.scaling.controller import (
     ControllerConfig,
     DecisionRecord,
     ScalingController,
 )
+from repro.core.scaling.service import ServiceProcess, StepResult, water_level
 from repro.core.scaling.backend import RunReport, ScalableBackend, compare
 from repro.core.scaling.registry import (
     available_policies,
@@ -17,6 +19,7 @@ from repro.core.scaling.registry import (
 __all__ = [
     "DEFAULT_CHANNEL", "SignalBus", "WindowStats",
     "ControllerConfig", "DecisionRecord", "ScalingController",
+    "ServiceProcess", "StepResult", "water_level",
     "RunReport", "ScalableBackend", "compare",
     "available_policies", "make_policy", "register_policy",
 ]

@@ -1,0 +1,169 @@
+"""The shared processor-sharing service core: exact water-filling, vectorized.
+
+The paper's Algorithm 1 distributes the capacity of one simulation step
+egalitarianly among all in-flight items, redistributing each finished item's
+excess to the still-hungry ones.  That per-item loop is mathematically exact
+*water-filling*: find the level ``tau`` such that
+``sum(min(rem_i, tau)) == capacity``; every item then consumes
+``min(rem_i, tau)`` units of work.  This module implements the water-filling
+directly, vectorized, and is the ONE service model every scaled backend runs
+on (the tweet simulator `Engine`, the elastic replica fleet `ElasticCluster`)
+-- policy/backend comparisons are only meaningful when the service process
+underneath them is identical (cf. the auto-scaling taxonomies,
+arXiv:1609.09224 and arXiv:1808.02254).
+
+Mechanics (all O(L + k) per step, no Python loops over in-flight items):
+
+* the in-flight set is a struct-of-arrays sorted by remaining work
+  (ascending), with arbitrary *payload columns* (post time, score, request
+  index, any signal channel) carried through the same permutation;
+* after a step every survivor has ``rem_i - tau`` left, which *preserves the
+  order*, so only new arrivals need merging in (``searchsorted`` + insert);
+* the finished items are exactly a *prefix* of the sorted array
+  (``rem_i <= tau``), so completion handling is a slice;
+* consumed work is exactly ``min(demand, capacity)`` -- water-filling wastes
+  nothing -- and the busy fraction is defined from work actually consumed,
+  not from pre-step demand.
+
+Bit-identical outcome to the paper's loop (property-tested against the
+literal Algorithm 1 in tests/test_simulator.py), ~1000x faster -- this is
+what makes 100k+-request streams and the 4.3M-tweet Spain trace cheap.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Mapping
+
+import numpy as np
+
+
+def water_level(rem_sorted: np.ndarray, capacity: float) -> tuple[float, int]:
+    """Find (tau, n_finished) s.t. sum(min(rem_i, tau)) == capacity.
+
+    ``rem_sorted`` ascending.  Returns n_finished = number of prefix elements
+    with rem_i <= tau (they complete this step).  If total demand <= capacity,
+    everything finishes (tau = inf).
+    """
+    L = rem_sorted.shape[0]
+    if L == 0:
+        return np.inf, 0
+    csum = np.cumsum(rem_sorted)
+    if csum[-1] <= capacity:
+        return np.inf, L
+    # With k items finished (the k smallest), the rest each get
+    #   tau_k = (capacity - csum[k-1]) / (L - k),   feasible iff rem[k] > tau_k >= rem[k-1]
+    # Find smallest k where rem_sorted[k] * (L - k) + csum[k-1] > capacity.
+    lhs = rem_sorted * (L - np.arange(L)) + np.concatenate(([0.0], csum[:-1]))
+    k = int(np.searchsorted(lhs > capacity, True))
+    prev = csum[k - 1] if k > 0 else 0.0
+    tau = (capacity - prev) / (L - k)
+    return float(tau), k
+
+
+@dataclass(frozen=True)
+class StepResult:
+    """Outcome of one service step."""
+
+    tau: float                         # water level (inf when everything drained)
+    demand: float                      # total remaining work before the step
+    consumed: float                    # work served, measured (== min(demand,
+                                       # capacity) by the conservation invariant)
+    busy: float                        # min(demand, capacity) / capacity -- equals
+                                       # consumed/capacity up to float rounding; kept
+                                       # in this exact form for bit-parity with the
+                                       # seed simulator (0 when capacity == 0)
+    finished: dict[str, np.ndarray]    # payload columns of the finished prefix
+    n_finished: int
+
+
+class ServiceProcess:
+    """Sorted struct-of-arrays in-flight set under exact processor sharing.
+
+    ``columns`` declares the per-item payload carried alongside the remaining
+    work: either a name -> dtype mapping or a plain sequence of names
+    (float64).  ``admit`` merges arrivals in; ``step`` water-fills one step of
+    capacity and returns the finished items' payload columns.
+    """
+
+    def __init__(self, columns: Mapping[str, np.dtype] | tuple = ()):
+        if not isinstance(columns, Mapping):
+            columns = {name: np.float64 for name in columns}
+        self.rem = np.empty(0, dtype=np.float64)
+        self.cols: dict[str, np.ndarray] = {
+            name: np.empty(0, dtype=dt) for name, dt in columns.items()}
+
+    def __len__(self) -> int:
+        return int(self.rem.shape[0])
+
+    @property
+    def demand(self) -> float:
+        """Total remaining work of the in-flight set."""
+        return float(self.rem.sum())
+
+    def admit(self, rem, **cols) -> dict[str, np.ndarray] | None:
+        """Merge arrivals into the sorted set (stable in arrival order).
+
+        Zero-demand items never enter the set: they complete instantly and
+        their payload columns are returned (None when there are none), in
+        arrival order -- the caller records them as finished this step.
+        """
+        rem = np.asarray(rem, dtype=np.float64)
+        if set(cols) != set(self.cols):
+            raise ValueError(
+                f"payload columns {sorted(cols)} do not match the declared "
+                f"columns {sorted(self.cols)}")
+        cols = {name: np.asarray(cols[name]) for name in self.cols}
+        instant = None
+        zero = rem <= 0.0
+        if zero.any():
+            idx = np.nonzero(zero)[0]
+            instant = {name: c[idx] for name, c in cols.items()}
+            keep = ~zero
+            rem = rem[keep]
+            cols = {name: c[keep] for name, c in cols.items()}
+        if rem.size:
+            order = np.argsort(rem, kind="stable")
+            rem = rem[order]
+            pos = np.searchsorted(self.rem, rem)
+            self.rem = np.insert(self.rem, pos, rem)
+            for name, c in cols.items():
+                self.cols[name] = np.insert(self.cols[name], pos, c[order])
+        return instant
+
+    def step(self, capacity: float) -> StepResult:
+        """Serve one step: distribute ``capacity`` by exact water-filling.
+
+        ``consumed`` is *measured* from the work actually served (each
+        finished item drank its whole remainder, each survivor drank exactly
+        ``tau``), not defined as ``min(demand, capacity)`` -- so the
+        conservation invariant ``consumed == min(demand, capacity)`` asserted
+        by the tests has teeth against regressions in the water-level math.
+        ``busy`` is demand clipped at capacity, over capacity: equal to the
+        consumed fraction by the same invariant (so an idle tail of the step
+        never reads as busy), but computed in exactly the seed simulator's
+        float form so the golden parity tests stay bit-for-bit.
+        """
+        if self.rem.shape[0] == 0:
+            return StepResult(tau=np.inf, demand=0.0, consumed=0.0, busy=0.0,
+                              finished={n: c[:0] for n, c in self.cols.items()},
+                              n_finished=0)
+        demand = float(self.rem.sum())
+        tau, k = water_level(self.rem, capacity)
+        fin_work = float(self.rem[:k].sum())
+        finished = {name: c[:k] for name, c in self.cols.items()}
+        if k:
+            self.rem = self.rem[k:]
+            for name in self.cols:
+                self.cols[name] = self.cols[name][k:]
+        if np.isfinite(tau):
+            if self.rem.shape[0] > 0:
+                self.rem = self.rem - tau
+            consumed = fin_work + tau * self.rem.shape[0]
+        else:
+            consumed = demand
+        busy = min(demand, capacity) / capacity if capacity > 0 else 0.0
+        return StepResult(tau=float(tau), demand=demand, consumed=consumed,
+                          busy=busy, finished=finished, n_finished=k)
+
+
+__all__ = ["ServiceProcess", "StepResult", "water_level"]

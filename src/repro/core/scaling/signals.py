@@ -41,9 +41,15 @@ class WindowStats:
 
     @property
     def relative_rise(self) -> float:
-        """Rise relative to the previous window's level (0 if no baseline)."""
-        if self.prev_mean > 1e-6:
-            return (self.mean - self.prev_mean) / self.prev_mean
+        """Rise relative to the previous window's *level* (0 if no baseline).
+
+        The baseline magnitude is ``abs(prev_mean)`` so a negative baseline
+        (paper polarity lives in [-1, 1]) still yields a positive relative
+        rise when the mean moves up -- a ``prev_mean > 0`` guard would
+        silently report 0 and the appdata trigger could never fire.
+        """
+        if abs(self.prev_mean) > 1e-6:
+            return (self.mean - self.prev_mean) / abs(self.prev_mean)
         return 0.0
 
 

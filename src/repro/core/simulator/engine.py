@@ -2,20 +2,12 @@
 
 The paper's Algorithm 1 distributes the CPU cycles of one simulation step
 egalitarianly among all in-flight tweets, redistributing each tweet's excess to the
-still-hungry ones.  That per-tweet loop is mathematically exact *water-filling*:
-find the level ``tau`` such that ``sum(min(rem_i, tau)) == cyclesPerStep``; every
-tweet then consumes ``min(rem_i, tau)`` cycles.  We implement the water-filling
-directly, vectorized:
-
-* the in-flight set is kept sorted by remaining cycles (ascending);
-* after a step every surviving tweet has ``rem_i - tau`` left, which *preserves the
-  order*, so only the new arrivals of the next step need to be merged in
-  (``searchsorted`` + concatenate, O(L + k));
-* the finished tweets are exactly a *prefix* of the sorted array (``rem_i <= tau``),
-  so completion handling is a slice.
-
-Bit-identical outcome to the paper's loop, ~1000x faster -- this is what makes the
-4.3M-tweet Spain trace x repeat-until-CI feasible.
+still-hungry ones.  That per-tweet loop is exact *water-filling*, implemented once
+for every backend in :mod:`repro.core.scaling.service` (sorted struct-of-arrays
+in-flight set, payload columns, prefix completion handling).  This engine carries
+(post time, sentiment) as the payload columns and is bit-identical to the paper's
+loop, ~1000x faster -- what makes the 4.3M-tweet Spain trace x repeat-until-CI
+feasible.
 
 The Table III controller mechanics (60 s adaptation frequency, 60 s
 provisioning delay, single-unit downscale cap, >= 1 unit floor) live in the
@@ -35,8 +27,10 @@ from repro.core.scaling import (
     ControllerConfig,
     RunReport,
     ScalingController,
+    ServiceProcess,
     SignalBus,
 )
+from repro.core.scaling.service import water_level as _water_level  # noqa: F401
 from repro.core.simulator.workload import Trace
 
 
@@ -103,27 +97,6 @@ class SimResult(RunReport):
         return out
 
 
-def _water_level(rem_sorted: np.ndarray, capacity: float) -> tuple[float, int]:
-    """Find (tau, n_finished) s.t. sum(min(rem_i, tau)) == capacity.
-
-    ``rem_sorted`` ascending.  Returns n_finished = number of prefix elements with
-    rem_i <= tau (they complete this step).  If total demand <= capacity, everything
-    finishes (tau = inf).
-    """
-    L = rem_sorted.shape[0]
-    csum = np.cumsum(rem_sorted)
-    if csum[-1] <= capacity:
-        return np.inf, L
-    # With k tweets finished (the k smallest), the rest each get
-    #   tau_k = (capacity - csum[k-1]) / (L - k),   feasible iff rem[k] > tau_k >= rem[k-1]
-    # Find smallest k where rem_sorted[k] * (L - k) + csum[k-1] > capacity.
-    lhs = rem_sorted * (L - np.arange(L)) + np.concatenate(([0.0], csum[:-1]))
-    k = int(np.searchsorted(lhs > capacity, True))
-    prev = csum[k - 1] if k > 0 else 0.0
-    tau = (capacity - prev) / (L - k)
-    return float(tau), k
-
-
 class Engine:
     """One simulation run of (trace x policy x config)."""
 
@@ -143,10 +116,9 @@ class Engine:
         arrive_step = (tr.post_time / step).astype(np.int64)
         duration_steps = int(tr.duration / step)
 
-        # in-flight struct-of-arrays, sorted ascending by remaining cycles
-        rem = np.empty(0, dtype=np.float64)
-        post = np.empty(0, dtype=np.float64)
-        sent = np.empty(0, dtype=np.float32)
+        # in-flight set: the shared water-filling core, carrying (post time,
+        # sentiment) payload columns through the sorted arrays
+        proc = ServiceProcess({"post": np.float64, "sent": np.float32})
 
         # input queue (only used when max_input_rate caps admission)
         q_head = 0          # first not-yet-admitted tweet index (arrival order)
@@ -203,53 +175,28 @@ class Engine:
                 q_head = adm_hi
             k_new = adm_hi - adm_lo
             if k_new > 0:
-                new_rem = tr.cycles[adm_lo:adm_hi]
-                new_post = tr.post_time[adm_lo:adm_hi]
-                new_sent = tr.sentiment[adm_lo:adm_hi]
                 # zero-demand tweets (PE1 discards) complete instantly
-                zero = new_rem <= 0.0
-                if zero.any():
-                    idx = np.nonzero(zero)[0]
-                    delays_new = (now + step) - new_post[idx]
-                    delays[n_done : n_done + idx.size] = delays_new
-                    n_done += idx.size
-                    bus.record("sentiment", new_post[idx], new_sent[idx])
-                    keep = ~zero
-                    new_rem, new_post, new_sent = new_rem[keep], new_post[keep], new_sent[keep]
-                if new_rem.size:
-                    order = np.argsort(new_rem, kind="stable")
-                    new_rem, new_post, new_sent = new_rem[order], new_post[order], new_sent[order]
-                    pos = np.searchsorted(rem, new_rem)
-                    rem = np.insert(rem, pos, new_rem)
-                    post = np.insert(post, pos, new_post)
-                    sent = np.insert(sent, pos, new_sent)
+                instant = proc.admit(tr.cycles[adm_lo:adm_hi],
+                                     post=tr.post_time[adm_lo:adm_hi],
+                                     sent=tr.sentiment[adm_lo:adm_hi])
+                if instant is not None:
+                    k0 = instant["post"].size
+                    delays[n_done : n_done + k0] = (now + step) - instant["post"]
+                    n_done += k0
+                    bus.record("sentiment", instant["post"], instant["sent"])
 
-            L = rem.shape[0]
+            L = len(proc)
             insys_hist.append(L + (n_arrived - q_head) if cfg.queue_in_system else L)
 
             # ---- distribute cycles (Algorithm 1, exact water-filling) ------------
             capacity = units * cfg.freq_hz * step
-            if L > 0:
-                demand = float(rem.sum())
-                tau, k_fin = _water_level(rem, capacity)
-                if k_fin > 0:
-                    fin_post = post[:k_fin]
-                    fin_sent = sent[:k_fin]
-                    delays[n_done : n_done + k_fin] = (now + step) - fin_post
-                    n_done += k_fin
-                    bus.record("sentiment", fin_post, fin_sent)
-                    rem = rem[k_fin:]
-                    post = post[k_fin:]
-                    sent = sent[k_fin:]
-                if np.isfinite(tau):
-                    if rem.shape[0] > 0:
-                        rem = rem - tau
-                    util = 1.0
-                else:
-                    # everything drained this step: busy fraction = demand / capacity
-                    util = min(1.0, demand / capacity) if capacity > 0 else 0.0
-            else:
-                util = 0.0
+            sr = proc.step(capacity)
+            if sr.n_finished > 0:
+                fin_post = sr.finished["post"]
+                delays[n_done : n_done + sr.n_finished] = (now + step) - fin_post
+                n_done += sr.n_finished
+                bus.record("sentiment", fin_post, sr.finished["sent"])
+            util = sr.busy
             units_hist.append(units)
             util_hist.append(util)
 
@@ -259,12 +206,12 @@ class Engine:
 
             t_step += 1
             done_with_arrivals = t_step >= duration_steps and q_head >= n_total
-            if done_with_arrivals and (rem.shape[0] == 0 or not cfg.drain):
+            if done_with_arrivals and (len(proc) == 0 or not cfg.drain):
                 break
             if t_step >= max_steps:
                 raise RuntimeError(
                     f"simulation failed to drain after {max_steps} steps "
-                    f"({rem.shape[0]} tweets left, {units} units)"
+                    f"({len(proc)} tweets left, {units} units)"
                 )
 
         units_arr = np.asarray(units_hist, dtype=np.int64)
@@ -316,7 +263,7 @@ def repeat_until_ci(
             mean, ci = mean_confidence_interval(vals)
             if mean == 0.0 or ci < rel_ci * abs(mean):
                 break
-    return results
+    return results, len(results)
 
 
 __all__ = ["SimConfig", "SimResult", "Engine", "run_scenario", "repeat_until_ci"]

@@ -82,18 +82,35 @@ class ServingEngine:
         return len(self.queue) + len(self.active)
 
     # -- scheduling ---------------------------------------------------------------
-    def _fill_slots(self, now: float) -> None:
+    def _fill_slots(self, now: float) -> int:
+        """Refill free slots from the queue; returns the number of requests
+        that finished at fill time (max_new_tokens budget spent by the
+        prefill token).  Such a request still consumes its slot for this
+        step -- the prefill ran there -- so the slot cap bounds prefill work
+        exactly like decode work."""
         limit = min(self.slot_limit, self.cfg.max_batch)
         free = [s for s in range(self.cfg.max_batch) if s not in self.active]
-        for slot in free:
-            if not self.queue or len(self.active) >= limit:
-                break
+        fill_done = 0
+        while free and self.queue and len(self.active) + fill_done < limit:
             req = self.queue.pop(0)
+            if req.max_new_tokens <= 0:
+                # nothing to generate: complete without a prefill or a slot
+                req.done_s = now
+                self.completed.append(req)
+                continue
+            slot = free.pop(0)
             toks = jnp.asarray(req.prompt, jnp.int32)[None]
             logits, cache1 = self._prefill_one(self.params, {"tokens": toks})
             tok = int(jnp.argmax(logits[0, -1]))
             req.output.append(tok)
             req.first_token_s = now
+            if req.max_new_tokens == 1:
+                # the prefill token is the whole budget: finish at fill time
+                # (a decode here would emit max_new_tokens + 1 tokens)
+                req.done_s = now
+                self.completed.append(req)
+                fill_done += 1
+                continue
             if self.cache is None:
                 self.cache = jax.tree.map(
                     lambda c: jnp.repeat(jnp.zeros_like(c), self.cfg.max_batch, axis=1),
@@ -106,14 +123,18 @@ class ServingEngine:
             self.pos[slot] = len(req.prompt)
             self.remaining[slot] = req.max_new_tokens - 1
             self.active[slot] = req
+        return fill_done
 
     def step(self, now: float | None = None) -> int:
         """One engine step: refill + one decode for all active slots.
-        Returns the number of active slots advanced."""
+        Returns the number of slots that served work this step (decodes plus
+        fill-time completions)."""
         now = time.monotonic() if now is None else now
-        self._fill_slots(now)
+        fill_done = self._fill_slots(now)
         if not self.active:
-            return 0
+            if fill_done:
+                self.step_count += 1
+            return fill_done
         # batch decode: positions differ per slot => run per-slot decode at the
         # max pos and mask.  For simplicity (CPU substrate) we decode slot-wise
         # when positions are heterogeneous, batched when uniform.
@@ -136,7 +157,7 @@ class ServingEngine:
         for slot in finished:
             self.completed.append(self.active.pop(slot))
         self.step_count += 1
-        return len(self.active) + len(finished)
+        return len(self.active) + len(finished) + fill_done
 
     def run_until_drained(self, max_steps: int = 10_000) -> None:
         for _ in range(max_steps):

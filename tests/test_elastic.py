@@ -1,8 +1,15 @@
 """Elastic serving cluster: policy behaviour + SLA/cost accounting."""
+import time
+
 import numpy as np
 import pytest
 
-from repro.core.autoscaler import AppDataPolicy, CompositePolicy, ThresholdPolicy
+from repro.core.autoscaler import (
+    AppDataPolicy,
+    CompositePolicy,
+    TargetTrackingPolicy,
+    ThresholdPolicy,
+)
 from repro.core.elastic import ClusterConfig, ElasticCluster, ServeRequest
 
 
@@ -54,3 +61,67 @@ def test_replica_floor_and_scale_down():
                          ThresholdPolicy(0.9), reqs).run()
     assert res["n_scale_downs"] > 0            # idle fleet shrinks
     assert res["n_done"] == len(reqs)
+
+
+def test_slot_cap_staggers_equal_work_batches():
+    """Admission is slot-capped: 3 * max_slots identical requests arriving at
+    once drain in (at least) three distinct FIFO waves -- without the cap,
+    equal-work requests would all water-fill together and finish in one step."""
+    spec = ClusterConfig().replica
+    reqs = [ServeRequest(rid=i, arrival_s=0.5, prefill_len=1000, decode_len=32)
+            for i in range(3 * spec.max_slots)]
+    res = ElasticCluster(ClusterConfig(), ThresholdPolicy(0.7), reqs).run()
+    assert res["n_done"] == len(reqs)
+    assert int(res.in_system_t.max()) == len(reqs)
+    done_times = np.array([r.done_s for r in reqs])
+    assert np.unique(done_times).size >= 3
+    assert done_times[0] < done_times[-1]          # FIFO order across waves
+
+
+def test_class_model_quantile_cache():
+    """The sorted-sample cache must match np.quantile on the live sample set,
+    through observes (invalidation) and the trim at 50k samples."""
+    from repro.core.elastic import ReplicaSpec
+    from repro.core.elastic.cluster import _ClassModel
+    rng = np.random.default_rng(0)
+    m = _ClassModel(ReplicaSpec())
+    m.observe_seconds(rng.exponential(1.0, size=1000))
+    for q in (0.5, 0.9, 0.99):
+        assert m.quantile_seconds(q) == pytest.approx(
+            float(np.quantile(np.asarray(m._samples), q)))
+    # repeated reads hit the cache, observes invalidate it
+    m.quantile_seconds(0.9)
+    m.observe_seconds(np.array([100.0]))
+    assert m.quantile_seconds(1.0) == pytest.approx(100.0)
+    m.observe(ServeRequest(rid=0, arrival_s=0.0, prefill_len=500_000,
+                           decode_len=10_000))
+    assert m.quantile_seconds(1.0) == pytest.approx(max(m._samples))
+    # trim at 50k: quantiles track the surviving samples
+    m.observe_seconds(rng.exponential(1.0, size=60_000))
+    assert len(m._samples) <= 50_000
+    for q in (0.1, 0.9):
+        assert m.quantile_seconds(q) == pytest.approx(
+            float(np.quantile(np.asarray(m._samples), q)))
+    # one bulk observe far past the cap (e.g. a 250k-request stream priced at
+    # construction) must still land under it
+    m2 = _ClassModel(ReplicaSpec())
+    m2.observe_seconds(rng.exponential(1.0, size=250_000))
+    assert len(m2._samples) <= 50_000
+    assert m2.quantile_seconds(0.5) == pytest.approx(
+        float(np.quantile(np.asarray(m2._samples), 0.5)))
+
+
+def test_100k_request_stream_completes_in_seconds():
+    """Acceptance: a 100k-request overload stream through the vectorized
+    water-filling backend finishes well under 30 s wall."""
+    from benchmarks.elastic_serving import _scale_workload
+    reqs = _scale_workload(100_000)
+    clu = ElasticCluster(ClusterConfig(max_replicas=96, starting_replicas=16),
+                         TargetTrackingPolicy(target=0.75), reqs)
+    t0 = time.perf_counter()
+    res = clu.run()
+    wall = time.perf_counter() - t0
+    assert res.n_done == 100_000
+    assert np.allclose(res.consumed_t,
+                       np.minimum(res.demand_t, res.capacity_t))
+    assert wall < 30.0, f"100k-request run took {wall:.1f}s"

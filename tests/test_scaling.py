@@ -20,6 +20,7 @@ from repro.core.scaling import (
     RunReport,
     ScalableBackend,
     ScalingController,
+    ServiceProcess,
     SignalBus,
     WindowStats,
     available_policies,
@@ -78,9 +79,11 @@ def test_engine_parity_with_input_rate_cap():
 
 
 def test_elastic_backend_golden_regression():
-    """Pin the elastic backend's behavior on a fixed workload (captured after
-    the control-plane migration; identical to the seed implementation on this
-    workload, see DESIGN.md migration notes on the window-edge unification)."""
+    """Pin the elastic backend's behavior on a fixed workload (regenerated
+    after the Algorithm-1 unification onto the shared water-filling service
+    core, see DESIGN.md: the old equal-share loop dropped a finished request's
+    excess capacity, so the water-filling fleet completes the same stream with
+    lower latency and fewer replica-hours)."""
     from repro.core.elastic import ClusterConfig, ElasticCluster, ServeRequest
     rng = np.random.default_rng(0)
     reqs = []
@@ -97,10 +100,63 @@ def test_elastic_backend_golden_regression():
     res = ElasticCluster(ClusterConfig(), pol, reqs).run()
     assert res["n_done"] == 406
     assert res["violation_rate"] == 0.0
-    assert res["mean_latency_s"] == pytest.approx(1.928130771572525)
-    assert res["replica_hours"] == pytest.approx(0.1225)
-    assert res["max_replicas"] == 4
-    assert (res["n_scale_ups"], res["n_scale_downs"]) == (4, 5)
+    assert res["mean_latency_s"] == pytest.approx(1.6547317567942001)
+    assert res["replica_hours"] == pytest.approx(0.10111111111111111)
+    assert res["max_replicas"] == 3
+    assert (res["n_scale_ups"], res["n_scale_downs"]) == (2, 3)
+
+
+# ---------------------------------------------------------------------------------
+# Shared water-filling service core (ServiceProcess)
+# ---------------------------------------------------------------------------------
+
+def test_service_process_waterfills_and_conserves():
+    proc = ServiceProcess({"idx": np.int64})
+    empty = proc.step(5.0)
+    assert empty.consumed == 0.0 and empty.busy == 0.0 and empty.n_finished == 0
+    proc.admit(np.array([3.0, 1.0, 2.0]), idx=np.array([0, 1, 2]))
+    assert len(proc) == 3 and proc.demand == pytest.approx(6.0)
+    # capacity 4 over [1, 2, 3]: tau = 1.5, only the smallest item finishes
+    r = proc.step(4.0)
+    assert r.tau == pytest.approx(1.5)
+    assert list(r.finished["idx"]) == [1]
+    assert r.consumed == pytest.approx(4.0) and r.busy == 1.0
+    # survivors hold [0.5, 1.5]; surplus capacity drains them, busy < 1
+    r = proc.step(10.0)
+    assert np.isinf(r.tau) and r.n_finished == 2
+    assert list(r.finished["idx"]) == [2, 0]       # ascending remaining work
+    assert r.consumed == pytest.approx(2.0) and r.busy == pytest.approx(0.2)
+    assert len(proc) == 0
+
+
+def test_service_process_zero_work_and_payload_columns():
+    proc = ServiceProcess(("val",))
+    instant = proc.admit(np.array([0.0, 2.0]), val=np.array([7.0, 8.0]))
+    assert list(instant["val"]) == [7.0]           # zero-demand: instant finish
+    assert len(proc) == 1
+    assert proc.admit(np.array([1.0]), val=np.array([9.0])) is None
+    r = proc.step(100.0)
+    assert list(r.finished["val"]) == [9.0, 8.0]   # columns follow the sort
+    # undeclared payload columns are rejected loudly, not silently dropped
+    with pytest.raises(ValueError, match="payload columns"):
+        proc.admit(np.array([1.0]), val=np.array([1.0]), prio=np.array([2.0]))
+    with pytest.raises(ValueError, match="payload columns"):
+        proc.admit(np.array([1.0]))
+
+
+def test_elastic_consumed_work_conservation():
+    """Acceptance: per-step consumed work == min(demand, capacity) -- the
+    elastic fleet never wastes a replica-second while requests are hungry --
+    and every priced replica-second of work is served exactly once."""
+    from repro.core.elastic import ClusterConfig, ElasticCluster
+    clu = ElasticCluster(ClusterConfig(), ThresholdPolicy(0.7),
+                         _cluster_requests(1500))
+    res = clu.run()
+    assert np.allclose(res.consumed_t,
+                       np.minimum(res.demand_t, res.capacity_t))
+    assert res.consumed_t.sum() == pytest.approx(clu._work.sum())
+    # busy fraction is defined from consumed work, not pre-step demand
+    assert np.allclose(res.util_t, res.consumed_t / res.capacity_t, atol=1e-6)
 
 
 # ---------------------------------------------------------------------------------
@@ -151,6 +207,25 @@ def test_signalbus_window_beyond_allocated_bins_is_empty():
     # partially-past window still sees only what falls inside it
     st = bus.window_stats("s", hi_bin=300, window_bins=60)   # [240, 300)
     assert st.count == 16
+
+
+def test_relative_rise_on_negative_baseline():
+    """Paper polarity lives in [-1, 1]: a negative baseline must still report
+    a rise (regression: the `prev_mean > 1e-6` guard silently yielded 0, so
+    AppDataPolicy in relative mode could never fire)."""
+    st = WindowStats(mean=-0.2, count=30, prev_mean=-0.5, prev_count=30)
+    assert st.rise == pytest.approx(0.3)
+    assert st.relative_rise == pytest.approx(0.6)
+    # positive baselines are unchanged
+    up = WindowStats(mean=0.9, count=30, prev_mean=0.6, prev_count=30)
+    assert up.relative_rise == pytest.approx(0.5)
+    # no-baseline edge still reads 0
+    assert WindowStats(mean=0.4, count=30).relative_rise == 0.0
+    # and the appdata detector actually fires on the negative-baseline rise
+    pol = AppDataPolicy(extra_units=2, jump=0.5, relative=True, channel="s")
+    obs = Observation(time=0.0, n_units=1, n_pending=0, utilization=0.5,
+                      n_in_system=0, input_rate=0.0, signals={"s": st})
+    assert pol.decide(obs).delta == 2
 
 
 def test_signalbus_multi_channel_isolation():

@@ -68,6 +68,50 @@ def test_continuous_batching_greedy_exact():
         assert r.output == ref
 
 
+def test_max_new_tokens_one_emits_exactly_one_token():
+    """Regression: a max_new_tokens=1 request used to emit 2 tokens (prefill
+    argmax + one forced decode); it must finish at fill time instead."""
+    cfg = get_smoke_config("smollm-135m")
+    m = build_model(cfg)
+    params = m.init_params(jax.random.key(0))
+    eng = ServingEngine(m, params, ServeConfig(max_batch=2, max_len=32))
+    rng = np.random.default_rng(1)
+    one = Request(rid=0, prompt=rng.integers(0, cfg.vocab, 6).astype(np.int32),
+                  max_new_tokens=1)
+    two = Request(rid=1, prompt=rng.integers(0, cfg.vocab, 5).astype(np.int32),
+                  max_new_tokens=2)
+    eng.submit(one)
+    eng.submit(two)
+    eng.run_until_drained()
+    assert len(eng.completed) == 2
+    assert len(one.output) == 1 and one.done_s is not None
+    assert len(two.output) == 2
+    # the single token is the greedy prefill argmax
+    logits, _ = jax.jit(m.forward)(params, {"tokens": jnp.asarray(one.prompt)[None]})
+    assert one.output == [int(jnp.argmax(logits[0, -1]))]
+    # a fill-time finish must not leave the slot occupied
+    assert not eng.active and not eng.queue
+    # fill-time finishes still respect the slot cap and count as served work:
+    # 4 one-token requests through max_batch=2 take 2 steps, not 1
+    eng2 = ServingEngine(m, params, ServeConfig(max_batch=2, max_len=32))
+    for i in range(4):
+        eng2.submit(Request(rid=i,
+                            prompt=rng.integers(0, cfg.vocab, 4).astype(np.int32),
+                            max_new_tokens=1))
+    assert eng2.step(now=0.0) == 2
+    assert len(eng2.completed) == 2 and len(eng2.queue) == 2
+    assert eng2.step(now=1.0) == 2
+    assert len(eng2.completed) == 4
+    assert eng2.step_count == 2                    # fill-only steps still count
+    # a zero-budget request completes with no output, no prefill timestamp
+    zero = Request(rid=9, prompt=rng.integers(0, cfg.vocab, 4).astype(np.int32),
+                   max_new_tokens=0)
+    eng2.submit(zero)
+    eng2.run_until_drained()
+    assert zero.done_s is not None and zero.output == []
+    assert zero.first_token_s is None
+
+
 def test_vector_pos_decode_matches_scalar():
     cfg = get_smoke_config("qwen2.5-3b")
     m = build_model(cfg)

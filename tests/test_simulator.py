@@ -7,11 +7,14 @@ from _hypothesis_compat import given, settings, st
 
 from repro.core.autoscaler import LoadPolicy, ThresholdPolicy
 from repro.core.autoscaler.base import Decision, Observation, Policy
-from repro.core.simulator import SimConfig, generate_trace, run_scenario
+from repro.core.simulator import (
+    SimConfig, generate_trace, repeat_until_ci, run_scenario,
+)
 from repro.core.simulator.distributions import (
     CYCLES_PER_DELAY_SECOND, TESTBED_FREQ_HZ, TESTBED_IN_FLIGHT,
     TESTBED_INPUT_RATE, TESTBED_MEAN_DELAY_S, TESTBED_UTILIZATION, ServiceModel,
 )
+from repro.core.scaling.service import water_level
 from repro.core.simulator.engine import _water_level
 
 
@@ -62,6 +65,21 @@ def test_water_level_monotone(rems):
     assert k2 >= k1
     if np.isfinite(t1) and np.isfinite(t2):
         assert t2 >= t1
+
+
+def test_water_level_legacy_alias():
+    """The engine's `_water_level` is the shared core's `water_level`."""
+    assert _water_level is water_level
+
+
+def test_repeat_until_ci_returns_results_and_reps():
+    """Regression: the docstring promises (results, reps) but only the
+    results list was returned."""
+    out = repeat_until_ci(lambda: ThresholdPolicy(0.9), "england",
+                          min_reps=2, max_reps=2)
+    results, reps = out
+    assert reps == len(results) == 2
+    assert all(hasattr(r, "violation_rate") for r in results)
 
 
 def test_littles_law_calibration():
