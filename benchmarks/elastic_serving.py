@@ -136,10 +136,12 @@ def run_scale(n: int = 100_000) -> Rows:
     return rows
 
 
-def run(quick: bool = False) -> Rows:
+def run(quick: bool = False, cfg: ClusterConfig | None = None) -> Rows:
+    """``cfg`` lets callers supply a measured ClusterConfig (e.g. the remesh
+    provisioning cost from examples/elastic_serving.py Phase A)."""
     banner("Elastic LLM serving on the scaling control plane (beyond-paper)")
     rows = Rows("elastic")
-    cfg = ClusterConfig()
+    cfg = cfg or ClusterConfig()
     n = 4_000 if quick else 12_000
 
     results: dict[str, RunReport] = {}

@@ -1,0 +1,134 @@
+"""Cross-backend policy comparison table (ROADMAP benchmarks item).
+
+The same policy families drive every :class:`repro.core.scaling.ScalableBackend`
+-- the tweet simulator (unit = CPU), the elastic replica fleet (unit =
+replica), and the LIVE serving engine (unit = decode slot, real JAX
+prefill/decode with engine-computed logprob scores) -- and the per-backend
+RunReports are flattened through :func:`repro.core.scaling.compare` into one
+table, emitted as a JSON artifact under ``benchmarks/artifacts/``.
+
+This is the redesign's payoff made visible: one control plane, one report
+schema, three very different service processes in a single comparison.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import Rows, banner
+from repro.core.autoscaler import (
+    AppDataPolicy,
+    CompositePolicy,
+    LoadPolicy,
+    TargetTrackingPolicy,
+    ThresholdPolicy,
+)
+from repro.core.scaling import RunReport, compare
+
+ARTIFACT = os.path.join(os.path.dirname(__file__), "artifacts",
+                        "policy_table.json")
+
+
+def _simulator_reports(quick: bool) -> dict[str, RunReport]:
+    from repro.core.simulator import SimConfig, generate_trace, run_scenario
+    from repro.core.simulator.distributions import ServiceModel
+    sm = ServiceModel()
+    cfg = SimConfig()
+    # england is the smallest calibrated trace (~370k tweets vs uruguay's 1.8M)
+    trace = generate_trace("england" if quick else "uruguay", seed=0)
+    mk = {
+        "threshold70": lambda: ThresholdPolicy(0.7),
+        "target75": lambda: TargetTrackingPolicy(target=0.75),
+        "load+appdata": lambda: CompositePolicy(
+            [LoadPolicy(sm, quantile=0.99999), AppDataPolicy(extra_units=1)]),
+    }
+    return {f"sim.{name}": run_scenario(trace, factory(), cfg)
+            for name, factory in mk.items()}
+
+
+def _elastic_reports(quick: bool) -> dict[str, RunReport]:
+    from benchmarks.elastic_serving import _ReplicaLoadPolicy, _workload
+    from repro.core.elastic import ClusterConfig, ElasticCluster
+    cfg = ClusterConfig()
+    n = 2_000 if quick else 8_000
+    out: dict[str, RunReport] = {}
+    for name, mk in [
+        ("threshold70", lambda h: ThresholdPolicy(0.7)),
+        ("target75", lambda h: TargetTrackingPolicy(target=0.75)),
+        ("load+appdata", lambda h: CompositePolicy([
+            _ReplicaLoadPolicy(h, quantile=0.99, sla_s=cfg.sla_s),
+            AppDataPolicy(extra_units=4, jump=0.5)])),
+    ]:
+        holder = [None]
+        cluster = ElasticCluster(cfg, mk(holder), _workload(n=n))
+        holder[0] = cluster
+        out[f"elastic.{name}"] = cluster.run()
+    return out
+
+
+def _serve_reports(quick: bool) -> dict[str, RunReport]:
+    """Live backend: a real ServingEngine per policy (paged KV cache, engine
+    logprob scores feeding the output_score channel)."""
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.core.scaling import make_policy
+    from repro.data import request_stream
+    from repro.launch.serve import ServeBackend
+    from repro.models import build_model
+    from repro.serving import Request, ServeConfig, ServingEngine
+
+    cfg = get_smoke_config("smollm-135m")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.key(0))
+    n_req, horizon = (12, 20.0) if quick else (30, 40.0)
+    out: dict[str, RunReport] = {}
+    for name in ("threshold", "target"):
+        eng = ServingEngine(model, params, ServeConfig(max_batch=4, max_len=128))
+        reqs = []
+        stream = request_stream(n_requests=n_req, seed=0, mean_prompt=12,
+                                mean_decode=6, burst_times=(horizon * 0.5,),
+                                horizon_s=horizon)
+        for i, (t, p, d) in enumerate(stream):
+            reqs.append(Request(
+                rid=i, arrival_s=t,
+                prompt=np.random.default_rng(i).integers(
+                    0, cfg.vocab, min(p, 48)).astype(np.int32),
+                max_new_tokens=max(min(d, 24), 1)))
+        backend = ServeBackend(eng, reqs, sla_s=15.0, horizon_s=horizon,
+                               policy=make_policy(name))
+        out[f"serve.{name}"] = backend.run()
+    return out
+
+
+def run(quick: bool = False) -> Rows:
+    banner("Cross-backend policy table (simulator / elastic / live serve)")
+    rows = Rows("policy_table")
+    reports: dict[str, RunReport] = {}
+    reports.update(_simulator_reports(quick))
+    reports.update(_elastic_reports(quick))
+    reports.update(_serve_reports(quick))
+
+    table = compare(reports)
+    for row in table:
+        rows.add(f"{row['name']}.viol_pct", row["violation_pct"])
+        rows.add(f"{row['name']}.p99_latency_s", row["p99_latency_s"])
+        rows.add(f"{row['name']}.max_units", float(row["max_units"]))
+
+    os.makedirs(os.path.dirname(ARTIFACT), exist_ok=True)
+    payload = {
+        "description": "same policy families across every ScalableBackend "
+                       "(unit: sim=CPU, elastic=replica, serve=decode slot)",
+        "columns": sorted({k for r in table for k in r}),
+        "rows": [{k: (v.item() if isinstance(v, np.generic) else v)
+                  for k, v in r.items()} for r in table],
+    }
+    with open(ARTIFACT, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    rows.add("artifact_rows", float(len(table)), ARTIFACT)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

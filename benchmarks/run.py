@@ -18,6 +18,8 @@ MODULES = [
     "ablation_window",
     "headline_claims",
     "elastic_serving",
+    "serving_engine",
+    "policy_table",
     "kernels_bench",
 ]
 

@@ -1,0 +1,80 @@
+"""Serving-engine smoke benchmark: the paged continuous batcher under a small
+mixed-bucket workload, with HARD regression gates on the two properties the
+paged refactor bought (scripts/check.sh runs this in the verify pass):
+
+* prefill jit retraces are bounded by the number of distinct request_class
+  buckets (a per-length retrace regression fails the run);
+* decode jit retraces are bounded by the power-of-two active-batch sizes
+  (a per-step or per-slot-count retrace regression fails the run);
+
+plus a generous wall-clock bound so a gross slowdown (e.g. decode falling
+back to per-slot loops, gather turning O(S^2)) fails CI rather than just
+getting slower.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import Rows, banner
+
+WALL_BOUND_S = 120.0          # generous CPU bound; normal runs are ~10x faster
+
+
+def run(quick: bool = False) -> Rows:
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.models import build_model
+    from repro.serving import Request, ServeConfig, ServingEngine
+
+    banner("Serving engine smoke (paged KV, bucketed prefill, active-slot decode)")
+    rows = Rows("serving_engine")
+    cfg = get_smoke_config("smollm-135m")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.key(0))
+    eng = ServingEngine(model, params, ServeConfig(max_batch=4, max_len=128))
+
+    rng = np.random.default_rng(0)
+    n = 12 if quick else 32
+    reqs = []
+    for i in range(n):
+        # prompt lengths spread over three power-of-two buckets (<=16, 32, 64)
+        plen = int(rng.integers(4, 60))
+        reqs.append(Request(
+            rid=i, prompt=rng.integers(0, cfg.vocab, plen).astype(np.int32),
+            max_new_tokens=int(rng.integers(2, 10))))
+        eng.submit(reqs[-1])
+    buckets = {min(r.request_class[0], eng.cfg.max_len) for r in reqs}
+
+    t0 = time.perf_counter()
+    eng.run_until_drained()
+    wall = time.perf_counter() - t0
+    assert len(eng.completed) == n, f"engine dropped requests: {len(eng.completed)}/{n}"
+    eng.kv.check_invariants()
+
+    tokens = sum(len(r.output) for r in reqs)
+    rows.add("n_requests", float(n))
+    rows.add("wall_s", wall)
+    rows.add("tokens", float(tokens))
+    rows.add("tokens_per_s", tokens / wall)
+    rows.add("engine_steps", float(eng.step_count))
+    rows.add("n_buckets", float(len(buckets)))
+    rows.add("prefill_traces", float(eng.prefill_trace_count))
+    rows.add("decode_traces", float(eng.decode_trace_count))
+    rows.add("mean_score_logprob",
+             float(np.mean([r.score for r in reqs])))
+
+    assert eng.prefill_trace_count <= len(buckets), (
+        f"prefill retraced {eng.prefill_trace_count}x for {len(buckets)} "
+        f"buckets -- per-length retracing is back")
+    decode_bound = int(np.ceil(np.log2(eng.cfg.max_batch))) + 1
+    assert eng.decode_trace_count <= decode_bound, (
+        f"decode retraced {eng.decode_trace_count}x (bound {decode_bound}) -- "
+        f"active-slot compaction is broken")
+    assert wall < WALL_BOUND_S, f"serving smoke took {wall:.1f}s > {WALL_BOUND_S}s"
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -17,38 +17,43 @@ Run:  PYTHONPATH=src python examples/elastic_serving.py
 import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
-import time
-
 import jax
 import numpy as np
 
 from repro.configs import get_smoke_config
-from repro.core.elastic import remesh_params
-from repro.core.elastic.remesh import scale_replicas
+from repro.core.elastic import (
+    ClusterConfig,
+    measure_provision_delay,
+    provisioned_cluster_config,
+)
 from repro.models import build_model
 
-# ---------- Phase A: real re-mesh / re-shard --------------------------------------
-print("=== Phase A: elastic re-mesh (8 host devices) ===")
+# ---------- Phase A: real re-mesh / re-shard, measured -----------------------------
+print("=== Phase A: elastic re-mesh (8 host devices), measured ===")
 cfg = get_smoke_config("smollm-360m")
 model = build_model(cfg)
 params = model.init_params(jax.random.key(0))
 devs = jax.devices()
 
+delays = []
 for n, tp in [(2, 2), (4, 2), (8, 2), (4, 4)]:
-    t0 = time.time()
-    mesh, params = scale_replicas(params, devices=devs[:n], model_parallel=tp)
-    # one forward on the new mesh proves the placement works
-    with mesh:
-        logits, _ = jax.jit(model.forward)(
-            params, {"tokens": np.zeros((2, 16), np.int32)})
-        logits.block_until_ready()
+    dt, mesh, params = measure_provision_delay(
+        model, params, devices=devs[:n], model_parallel=tp)
+    delays.append(dt)
     dp = n // tp
-    print(f"  re-meshed to dp={dp} tp={tp} ({n} devices) in {time.time() - t0:.2f}s"
+    print(f"  re-meshed to dp={dp} tp={tp} ({n} devices) in {dt:.2f}s"
           f"  (provisioning-delay analogue)")
 
+measured = float(np.max(delays))     # worst transition = conservative delay
+print(f"  measured provision delay: {measured:.2f}s "
+      f"(feeds ClusterConfig.provision_delay_s)")
+
 # ---------- Phase B: policy-driven fleet -------------------------------------------
-print("\n=== Phase B: fleet under the three policies ===")
+# The fleet simulation now pays the MEASURED re-provisioning cost from Phase A
+# instead of the assumed default -- application-measured data all the way down.
+print("\n=== Phase B: fleet under the three policies (measured delay) ===")
 import sys
 sys.path.insert(0, ".")
 from benchmarks.elastic_serving import run as elastic_bench
-elastic_bench(quick=True)
+elastic_bench(quick=True,
+              cfg=provisioned_cluster_config(ClusterConfig(), measured))

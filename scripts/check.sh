@@ -15,4 +15,8 @@ echo "== smoke: benchmarks =="
 python -m benchmarks.run --smoke
 
 echo
+echo "== smoke: serving engine (bounded wall-clock, trace-count gates) =="
+timeout 300 python -m benchmarks.run --smoke --only serving_engine
+
+echo
 echo "check.sh: ALL OK"

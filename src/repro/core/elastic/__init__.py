@@ -5,7 +5,13 @@ from repro.core.elastic.cluster import (
     ReplicaSpec,
     ServeRequest,
 )
-from repro.core.elastic.remesh import elastic_remesh_plan, remesh_params
+from repro.core.elastic.remesh import (
+    elastic_remesh_plan,
+    measure_provision_delay,
+    provisioned_cluster_config,
+    remesh_params,
+)
 
 __all__ = ["ClusterConfig", "ElasticCluster", "ElasticResult", "ReplicaSpec",
-           "ServeRequest", "elastic_remesh_plan", "remesh_params"]
+           "ServeRequest", "elastic_remesh_plan", "measure_provision_delay",
+           "provisioned_cluster_config", "remesh_params"]

@@ -11,6 +11,9 @@ rebuild the mesh over the survivors and restore from the latest checkpoint
 """
 from __future__ import annotations
 
+import dataclasses
+import time
+
 import jax
 from jax.sharding import Mesh
 
@@ -43,4 +46,36 @@ def scale_replicas(params, *, devices, model_parallel: int,
     return new_mesh, remesh_params(params, new_mesh)
 
 
-__all__ = ["elastic_remesh_plan", "remesh_params", "scale_replicas"]
+def measure_provision_delay(model, params, *, devices, model_parallel: int,
+                            probe_batch: int = 2, probe_len: int = 16):
+    """Measure the wall-clock cost of ONE elastic transition -- mesh rebuild +
+    parameter re-placement + first forward on the new mesh (compile/warmup).
+
+    This is the live analogue of ``ClusterConfig.provision_delay_s``: what a
+    replica actually costs to bring up, measured on the serving path instead
+    of assumed.  Returns ``(seconds, new_mesh, params_on_new_mesh)`` so a
+    sweep can chain transitions on the re-placed params.
+    """
+    import numpy as np
+    t0 = time.perf_counter()
+    mesh, params = scale_replicas(params, devices=devices,
+                                  model_parallel=model_parallel)
+    with mesh:
+        logits, _ = jax.jit(model.forward)(
+            params, {"tokens": np.zeros((probe_batch, probe_len), np.int32)})
+        jax.block_until_ready(logits)
+    return time.perf_counter() - t0, mesh, params
+
+
+def provisioned_cluster_config(base, measured_s: float, *,
+                               floor_s: float = 1.0):
+    """A copy of ``base`` (an elastic ``ClusterConfig``) whose
+    ``provision_delay_s`` is the measured remesh cost instead of the
+    assumed default -- the ROADMAP "live-backend depth" wiring."""
+    return dataclasses.replace(base,
+                               provision_delay_s=max(float(measured_s),
+                                                     floor_s))
+
+
+__all__ = ["elastic_remesh_plan", "remesh_params", "scale_replicas",
+           "measure_provision_delay", "provisioned_cluster_config"]

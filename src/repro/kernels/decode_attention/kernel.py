@@ -102,3 +102,95 @@ def decode_attention_fwd(q, k_cache, v_cache, scalars, *, block_k: int = 1024,
         out_shape=jax.ShapeDtypeStruct((B, Hq, D), q.dtype),
         interpret=interpret,
     )(scalars, q, k_cache, v_cache)
+
+
+def _paged_dec_kernel(tbl_ref, len_ref, win_ref, q_ref, k_ref, v_ref, o_ref,
+                      m_scr, l_scr, acc_scr, *, page_size: int, group: int,
+                      sm_scale: float):
+    """Block-table flash-decoding: grid (B, n_pages); iteration ``pi`` streams
+    the page ``tbl_ref[b, pi]`` holding logical positions
+    [pi*ps, (pi+1)*ps) of row b.  The block table is a scalar-prefetch
+    operand, so the page DMA address is computed before the body runs --
+    the same compiled kernel serves every decode step and every slot mix."""
+    b = pl.program_id(0)
+    pi = pl.program_id(1)
+    npg = pl.num_programs(1)
+    length = len_ref[b]     # valid logical entries for this row (incl. current)
+    window = win_ref[0]
+
+    @pl.when(pi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    k_start = pi * page_size
+    live = k_start < length
+    live &= jnp.where(window > 0, k_start + page_size - 1 >= length - window, True)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * sm_scale           # (Hq, d)
+        k = k_ref[0].astype(jnp.float32)                      # (ps, Hkv, d)
+        v = v_ref[0].astype(jnp.float32)
+        kr = jnp.repeat(k, group, axis=1)                     # (ps, Hq, d)
+        s = jnp.einsum("hd,thd->ht", q, kr)                   # (Hq, ps)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        valid = k_pos < length
+        valid &= jnp.where(window > 0, k_pos >= length - window, True)
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_cur = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1)
+        vr = jnp.repeat(v, group, axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jnp.einsum("ht,thd->hd", p, vr)
+        m_scr[...] = m_cur
+
+    @pl.when(pi == npg - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def paged_decode_attention_fwd(q, k_pages, v_pages, block_table, lengths,
+                               window, *, interpret: bool = False):
+    """q: (B, Hq, D); pages: (P, page_size, Hkv, D); block_table: (B, n) int32;
+    lengths: (B,) int32 valid logical entries per row (incl. the current
+    token); window: (1,) int32, -1 = unlimited.
+
+    Returns (B, Hq, D).  Rows attend only to their own pages; table entries
+    past a row's live pages may point anywhere (trash page) -- those grid
+    steps are masked dead by ``lengths``.
+    """
+    B, Hq, D = q.shape
+    page_size, Hkv = k_pages.shape[1], k_pages.shape[2]
+    n_pages = block_table.shape[1]
+    group = Hq // Hkv
+
+    kernel = functools.partial(_paged_dec_kernel, page_size=page_size,
+                               group=group, sm_scale=D ** -0.5)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, Hq, D), lambda b, pi, tbl, lens, win: (b, 0, 0)),
+            pl.BlockSpec((1, page_size, Hkv, D),
+                         lambda b, pi, tbl, lens, win: (tbl[b, pi], 0, 0, 0)),
+            pl.BlockSpec((1, page_size, Hkv, D),
+                         lambda b, pi, tbl, lens, win: (tbl[b, pi], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Hq, D), lambda b, pi, tbl, lens, win: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Hq,), jnp.float32),
+            pltpu.VMEM((Hq,), jnp.float32),
+            pltpu.VMEM((Hq, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, D), q.dtype),
+        interpret=interpret,
+    )(block_table, lengths, window, q, k_pages, v_pages)

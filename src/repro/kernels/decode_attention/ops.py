@@ -4,7 +4,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.decode_attention.kernel import decode_attention_fwd
+from repro.kernels.decode_attention.kernel import (
+    decode_attention_fwd,
+    paged_decode_attention_fwd,
+)
 
 
 def _interpret() -> bool:
@@ -24,4 +27,23 @@ def decode_attention(q1, k_cache, v_cache, pos, *, window: int | None = None,
     return out[:, None]
 
 
-__all__ = ["decode_attention"]
+def decode_attention_paged(q1, k_pages, v_pages, block_table, lengths, *,
+                           window=None):
+    """Block-table decode attention over a paged KV pool.
+
+    q1: (B, 1, Hq, D); pages: (P, page_size, Hkv, D); block_table: (B, n)
+    int32 (logical page i of row b lives in physical page block_table[b, i]);
+    lengths: (B,) valid logical entries per row, including the current token.
+    ``window`` may be a python int/None or a traced int32 scalar (-1 / None =
+    unlimited), so the call sites inside a scanned layer stack can pass the
+    per-layer window.  Returns (B, 1, Hq, D).
+    """
+    win = jnp.reshape(jnp.asarray(-1 if window is None else window, jnp.int32),
+                      (1,))
+    out = paged_decode_attention_fwd(
+        q1[:, 0], k_pages, v_pages, jnp.asarray(block_table, jnp.int32),
+        jnp.asarray(lengths, jnp.int32), win, interpret=_interpret())
+    return out[:, None]
+
+
+__all__ = ["decode_attention", "decode_attention_paged"]

@@ -22,3 +22,30 @@ def decode_attention_ref(q, k_cache, v_cache, pos: int, window: int | None = Non
     w = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgs,bshd->bhgd", w, v_cache.astype(jnp.float32))
     return o.reshape(B, Hq, D).astype(q.dtype)
+
+
+def paged_decode_attention_ref(q, k_pages, v_pages, block_table, lengths,
+                               window: int | None = None):
+    """Gather-over-pages oracle for the paged kernel.
+
+    q: (B, Hq, D); pages: (P, ps, Hkv, D); block_table: (B, n) int32;
+    lengths: (B,) valid logical entries per row.  Returns (B, Hq, D).
+    """
+    B, Hq, D = q.shape
+    P, ps, Hkv = k_pages.shape[0], k_pages.shape[1], k_pages.shape[2]
+    n = block_table.shape[1]
+    idx = (block_table[:, :, None] * ps + jnp.arange(ps)[None, None, :]
+           ).reshape(B, n * ps)
+    k = k_pages.reshape(P * ps, Hkv, D)[idx]                  # (B, S, Hkv, D)
+    v = v_pages.reshape(P * ps, Hkv, D)[idx]
+    group = Hq // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Hkv, group, D) * (D ** -0.5)
+    s = jnp.einsum("bhgd,bshd->bhgs", qf, k.astype(jnp.float32))
+    k_pos = jnp.arange(n * ps)
+    valid = k_pos[None, :] < lengths[:, None]                 # (B, S)
+    if window is not None and window > 0:
+        valid &= k_pos[None, :] >= lengths[:, None] - window
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", w, v.astype(jnp.float32))
+    return o.reshape(B, Hq, D).astype(q.dtype)

@@ -9,8 +9,10 @@ The driver is a :class:`repro.core.scaling.ScalableBackend` over the *live*
 :class:`~repro.serving.ServingEngine` (real JAX prefill/decode): the unit of
 elasticity is a decode SLOT, provisioning delay models cache/compile warmup,
 and the ``output_score`` SignalBus channel carries each request's
-application-output signal.  Any registered policy (``--policy threshold``,
-``target``, ...) can manage the slot pool.
+application-output signal -- the engine-computed running mean logprob of the
+tokens actually generated, not a synthetic driver-side stand-in.  Any
+registered policy (``--policy threshold``, ``target``, ...) can manage the
+slot pool.
 
 Straggler mitigation: a slot whose request has produced no token for
 ``--stall-steps`` engine steps (a stuck replica shard / preempted host in
@@ -95,14 +97,13 @@ class ServeBackend:
                 n_out = len(req.output)
                 if last_progress.get(req.rid, (-1, t))[0] == n_out:
                     if t - last_progress[req.rid][1] > self.stall_steps:
-                        eng.active.pop(slot)
-                        req.output.clear()
-                        eng.submit(req)          # backup dispatch
+                        eng.evict(slot)          # backup dispatch
                         self.evictions += 1
                         last_progress.pop(req.rid)
                 else:
                     last_progress[req.rid] = (n_out, t)
-            # application-output signal, indexed by request arrival time (§V-B)
+            # application-output signal (engine-computed mean decode logprob),
+            # indexed by request arrival time (§V-B)
             fresh = eng.completed[n_reported:]
             if fresh:
                 bus.record("output_score",
@@ -155,19 +156,16 @@ def serve(args) -> int:
                             mean_decode=args.mean_decode,
                             burst_times=(args.horizon * 0.5,),
                             horizon_s=args.horizon)
-    score_rng = np.random.default_rng(args.seed + 1)
-    burst_t = args.horizon * 0.5
     reqs = []
     for i, (t, p, d) in enumerate(stream):
-        r = Request(rid=i, arrival_s=t,
-                    prompt=np.random.default_rng(i).integers(
-                        0, cfg.vocab, min(p, args.max_len // 2)).astype(np.int32),
-                    max_new_tokens=max(min(d, args.max_len // 4), 1))
-        # output-score signal leads the burst (breaking-news-shaped answers)
-        hot = burst_t - 10.0 <= t <= burst_t + 10.0
-        r.score = float(np.clip((0.9 if hot else 0.3)
-                                + score_rng.normal(0, 0.05), 0, 1))
-        reqs.append(r)
+        # Request.score is left at its default: the ENGINE fills it with the
+        # running mean logprob of the tokens it generates, which is what the
+        # output_score channel records below.
+        reqs.append(Request(
+            rid=i, arrival_s=t,
+            prompt=np.random.default_rng(i).integers(
+                0, cfg.vocab, min(p, args.max_len // 2)).astype(np.int32),
+            max_new_tokens=max(min(d, args.max_len // 4), 1)))
 
     from repro.core.scaling import available_policies
     # policies whose observation tiers are meaningful for the slot backend:

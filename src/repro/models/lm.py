@@ -24,6 +24,7 @@ from repro.models.common import (
     ModelConfig, apply_rope, gated_mlp, init_dense, rms_norm, rope_tables,
 )
 from repro.models.moe import moe_ffn
+from repro.serving import kvcache
 
 STREAM_THRESHOLD = 4096
 STREAM_CHUNK = 512
@@ -194,11 +195,15 @@ def block_forward(x, bp, window, cos, sin, cfg: ModelConfig, use_kernel: bool):
 
 
 def block_decode(x, bp, window, cache_k, cache_v, pos, cos, sin, cfg: ModelConfig,
-                 cache_ks=None, cache_vs=None):
-    """One-token decode.  x: (B, 1, d); caches (B, S_max, Hkv, hd).
+                 cache_ks=None, cache_vs=None, block_table=None,
+                 use_kernel: bool = False):
+    """One-token decode.  x: (B, 1, d).
 
-    ``pos`` is a scalar (uniform batch) or an (B,) vector (continuous batching:
-    every slot carries its own write position / valid length).
+    KV storage sits behind the cache-ops interface (`repro.serving.kvcache`):
+    dense caches are (B, S_max, Hkv, hd) with ``pos`` a scalar (uniform batch)
+    or (B,) vector (continuous batching); with ``block_table`` (B, n_pages)
+    the caches are paged pools (P, page_size, Hkv, hd) shared by all rows, and
+    the new token scatters into the row's current page.
     ``cache_ks/vs``: per-token/head int8 scales when kv_cache_dtype == int8."""
     int8_kv = cache_ks is not None
     h = rms_norm(x, bp["ln1"], cfg.norm_eps)
@@ -210,37 +215,30 @@ def block_decode(x, bp, window, cache_k, cache_v, pos, cos, sin, cfg: ModelConfi
         v_store, v_sc = _kv_quantize(v)
     else:
         k_store, v_store = k, v
-    S = cache_k.shape[1]
-    k_pos = jnp.arange(S)
-    if jnp.ndim(pos) == 1:
-        upd = lambda c, n: jax.vmap(
-            lambda cb, nb, pb: jax.lax.dynamic_update_slice(cb, nb.astype(cb.dtype),
-                                                            (pb, 0, 0)))(c, n, pos)
-        cache_k = upd(cache_k, k_store)
-        cache_v = upd(cache_v, v_store)
-        if int8_kv:
-            cache_ks = upd(cache_ks, k_sc)
-            cache_vs = upd(cache_vs, v_sc)
-        valid = k_pos[None, :] < pos[:, None] + 1                   # (B, S)
-        valid &= jnp.where(window > 0, k_pos[None, :] > pos[:, None] - window, True)
-        mask = valid[:, None, :]                                    # (B, Sq=1, S)
+    if block_table is not None:
+        ops = kvcache.PagedOps(block_table)
+    elif jnp.ndim(pos) == 1:
+        ops = kvcache.DenseVectorOps()
     else:
-        upd = lambda c, n: jax.lax.dynamic_update_slice(
-            c, n.astype(c.dtype), (0, pos, 0, 0))
-        cache_k = upd(cache_k, k_store)
-        cache_v = upd(cache_v, v_store)
-        if int8_kv:
-            cache_ks = upd(cache_ks, k_sc)
-            cache_vs = upd(cache_vs, v_sc)
-        valid = k_pos < pos + 1
-        valid &= jnp.where(window > 0, k_pos > pos - window, True)
-        mask = valid[None, :]
+        ops = kvcache.DenseScalarOps()
+    cache_k = ops.write(cache_k, k_store, pos)
+    cache_v = ops.write(cache_v, v_store, pos)
     if int8_kv:
-        k_eff = _kv_dequantize(cache_k, cache_ks, cfg.dtype)
-        v_eff = _kv_dequantize(cache_v, cache_vs, cfg.dtype)
+        cache_ks = ops.write(cache_ks, k_sc, pos)
+        cache_vs = ops.write(cache_vs, v_sc, pos)
+    if block_table is not None and use_kernel and not int8_kv:
+        # Pallas path: attend over the page pool directly, no gather
+        from repro.kernels.decode_attention.ops import decode_attention_paged
+        o = decode_attention_paged(q, cache_k, cache_v, block_table, pos + 1,
+                                   window=window)
     else:
-        k_eff, v_eff = cache_k, cache_v
-    o = sdpa(q, k_eff, v_eff, mask)
+        k_eff = ops.view(cache_k)
+        v_eff = ops.view(cache_v)
+        if int8_kv:
+            k_eff = _kv_dequantize(k_eff, ops.view(cache_ks), cfg.dtype)
+            v_eff = _kv_dequantize(v_eff, ops.view(cache_vs), cfg.dtype)
+        mask = ops.mask(k_eff.shape[1], pos, window)
+        o = sdpa(q, k_eff, v_eff, mask)
     x = x + o.reshape(*x.shape[:2], -1) @ bp["wo"]
     h = rms_norm(x, bp["ln2"], cfg.norm_eps)
     f, _ = _ffn(h, bp, cfg)
@@ -329,8 +327,13 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int):
 
 
 def prefill(params, batch, cfg: ModelConfig, max_len: int | None = None,
-            *, use_kernel: bool = False):
-    """Run the prompt, return (last-position logits, cache dict)."""
+            *, use_kernel: bool = False, last_idx=None):
+    """Run the prompt, return (last-position logits, cache dict).
+
+    ``last_idx``: traced position of the true last prompt token.  Bucketed
+    prefill pads prompts to a fixed power-of-two length so one compiled shape
+    serves the whole bucket; the causal mask keeps positions <= last_idx
+    independent of the padding, and ``last_idx`` selects the real logits."""
     x = _embed_in(params, batch, cfg)
     B, S, _ = x.shape
     max_len = max_len or S
@@ -344,7 +347,9 @@ def prefill(params, batch, cfg: ModelConfig, max_len: int | None = None,
 
     x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"], windows))
     x = rms_norm(x, params["ln_f"], cfg.norm_eps)
-    logits = _lm_head(params, x[:, -1:], cfg)
+    x_last = (x[:, -1:] if last_idx is None
+              else jax.lax.dynamic_slice_in_dim(x, last_idx, 1, axis=1))
+    logits = _lm_head(params, x_last, cfg)
     if max_len > S:
         pad = ((0, 0), (0, 0), (0, max_len - S), (0, 0), (0, 0))
         ks = jnp.pad(ks, pad)
@@ -356,9 +361,13 @@ def prefill(params, batch, cfg: ModelConfig, max_len: int | None = None,
     return logits, {"k": ks.astype(cfg.dtype), "v": vs.astype(cfg.dtype)}
 
 
-def decode_step(params, cache, token, pos, cfg: ModelConfig):
-    """token: (B, 1) int32 (or (B,1,d) embeds); pos: scalar int32 count of cached
-    tokens.  Returns (logits (B,1,V), new cache)."""
+def decode_step(params, cache, token, pos, cfg: ModelConfig, *,
+                block_table=None, use_kernel: bool = False):
+    """token: (B, 1) int32 (or (B,1,d) embeds); pos: scalar int32 count of
+    cached tokens, or (B,) per-row counts (continuous batching).  With
+    ``block_table`` (B, n_pages) the cache leaves are paged pools
+    (L, P, page_size, ...) -- see `repro.serving.kvcache`.  Returns
+    (logits (B,1,V), new cache)."""
     if cfg.input_mode == "embeddings" and token.ndim == 3:
         x = token.astype(cfg.dtype)
     else:
@@ -378,7 +387,9 @@ def decode_step(params, cache, token, pos, cfg: ModelConfig):
             bp, w, ck, cv = layer
             cks = cvs = None
         x, (ck, cv, cks, cvs) = block_decode(x, bp, w, ck, cv, pos, cos, sin, cfg,
-                                             cache_ks=cks, cache_vs=cvs)
+                                             cache_ks=cks, cache_vs=cvs,
+                                             block_table=block_table,
+                                             use_kernel=use_kernel)
         return x, ((ck, cv, cks, cvs) if int8_kv else (ck, cv))
 
     if int8_kv:

@@ -22,13 +22,15 @@ class Model:
     prefill: Callable              # (params, batch, max_len) -> (logits, cache)
     decode_step: Callable          # (params, cache, token, pos) -> (logits, cache)
     init_cache: Callable           # (batch, max_len) -> cache
+    supports_paged: bool = False   # decode_step accepts block_table= (paged KV)
 
     def abstract_params(self):
         return jax.eval_shape(self.init_params, jax.random.key(0))
 
 
 def build_model(cfg: ModelConfig, *, use_kernel: bool = False) -> Model:
-    if cfg.family in ("dense", "moe", "vlm"):
+    paged = cfg.family in ("dense", "moe", "vlm")
+    if paged:
         from repro.models import lm as mod
     elif cfg.family in ("ssm", "hybrid"):
         from repro.models import mamba_lm as mod
@@ -37,14 +39,16 @@ def build_model(cfg: ModelConfig, *, use_kernel: bool = False) -> Model:
     else:
         raise ValueError(f"unknown family {cfg.family}")
 
+    decode_kwargs = {"use_kernel": use_kernel} if paged else {}
     return Model(
         cfg=cfg,
         init_params=partial(mod.init_params, cfg=cfg),
         forward=partial(mod.forward, cfg=cfg, use_kernel=use_kernel),
         loss_fn=partial(mod.loss_fn, cfg=cfg, use_kernel=use_kernel),
         prefill=partial(mod.prefill, cfg=cfg, use_kernel=use_kernel),
-        decode_step=partial(mod.decode_step, cfg=cfg),
+        decode_step=partial(mod.decode_step, cfg=cfg, **decode_kwargs),
         init_cache=partial(mod.init_cache, cfg),
+        supports_paged=paged,
     )
 
 

@@ -1,11 +1,29 @@
-"""Single-replica serving engine: fixed-slot continuous batcher over
+"""Single-replica serving engine: paged-KV continuous batcher over
 prefill/decode step functions, with straggler mitigation hooks.
 
 This is the per-replica substrate the elastic layer (repro.core.elastic)
 scales in and out.  Requests are classed by (prefill_len, decode_len) --
 the LLM analogue of the paper's tweet classes -- and the engine reports the
 application-level signals (queue depth, in-flight count, output score stream)
-that drive the paper's auto-scaling policies.
+that drive the paper's auto-scaling policies.  ``Request.score`` is the
+*real* application-output signal: the running mean log-probability of the
+tokens the model actually generated, fed to the control plane's
+``output_score`` channel by the serve driver.
+
+Serving path (attention families; see DESIGN.md "The serving stack"):
+
+* **paged KV cache** (`repro.serving.kvcache`) -- pages allocated at
+  prefill, appended as decode crosses page boundaries, freed on completion;
+* **bucketed prefill** -- prompts are padded to their ``request_class``
+  power-of-two bucket and the true last position is selected with a traced
+  index, so jit retraces are bounded by the number of distinct buckets,
+  not the number of distinct prompt lengths;
+* **active-slot decode** -- one batched heterogeneous-position decode over
+  the *active* slots only, compacted and padded to a power-of-two batch
+  (idle slots cost nothing; trace count is bounded by log2(max_batch)+1).
+
+Families without a paged decode path (ssm/hybrid, audio/encdec) fall back
+to the legacy dense tree cache, which batch-decodes every slot.
 """
 from __future__ import annotations
 
@@ -17,6 +35,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.registry import Model
+from repro.serving.kvcache import PagedKVCache
+
+
+def _bucket(n: int) -> int:
+    """Power-of-two length bucket, floor 16."""
+    return 1 << max(int(np.ceil(np.log2(max(n, 1)))), 4)
 
 
 @dataclass
@@ -29,14 +53,12 @@ class Request:
     first_token_s: float | None = None
     done_s: float | None = None
     output: list = field(default_factory=list)
-    score: float = 0.0                 # application-data signal (e.g. mean logprob)
+    score: float = 0.0                 # running mean logprob of emitted tokens
 
     @property
     def request_class(self) -> tuple[int, int]:
         """(prefill bucket, decode bucket) -- the service-demand class."""
-        pb = 1 << max(int(np.ceil(np.log2(max(len(self.prompt), 1)))), 4)
-        db = 1 << max(int(np.ceil(np.log2(max(self.max_new_tokens, 1)))), 4)
-        return pb, db
+        return _bucket(len(self.prompt)), _bucket(self.max_new_tokens)
 
 
 @dataclass(frozen=True)
@@ -45,14 +67,18 @@ class ServeConfig:
     max_len: int = 1024
     eos_token: int = -1                # -1: run to max_new_tokens
     greedy: bool = True
+    paged: bool = True                 # paged KV cache (attention families)
+    page_size: int = 16
+    num_pages: int | None = None       # default: max_batch*(max_len/ps) + trash
 
 
 class ServingEngine:
     """Synchronous continuous batcher (slot-based).
 
-    One decode step advances every active slot; finished slots are refilled
-    from the queue with a fresh prefill.  This mirrors production continuous
-    batching while staying simple enough to run under interpret-mode tests.
+    One decode step advances every *active* slot; finished slots release
+    their pages and are refilled from the queue with a fresh bucketed
+    prefill.  This mirrors production continuous batching while staying
+    simple enough to run under interpret-mode tests.
     """
 
     def __init__(self, model: Model, params, cfg: ServeConfig):
@@ -66,22 +92,147 @@ class ServingEngine:
         self.slot_limit: int = cfg.max_batch
         self.pos = np.zeros(cfg.max_batch, dtype=np.int32)
         self.remaining = np.zeros(cfg.max_batch, dtype=np.int32)
-        self.cache = None
-        self._decode = jax.jit(model.decode_step)
-        self._prefill_one = jax.jit(
-            lambda p, b: model.prefill(p, b, max_len=cfg.max_len))
         self.completed: list[Request] = []
         self.step_count = 0
+        self.paged = cfg.paged and model.supports_paged
+        if self.paged:
+            self.kv = PagedKVCache(model.init_cache, max_batch=cfg.max_batch,
+                                   max_len=cfg.max_len, page_size=cfg.page_size,
+                                   num_pages=cfg.num_pages)
+            self._prefill_jit = jax.jit(self._paged_prefill_fn)
+            self._decode_jit = jax.jit(self._paged_decode_fn)
+        else:
+            self.kv = None
+            self.cache = None                      # dense tree cache, lazy init
+            self._prefill_jit = jax.jit(self._dense_prefill_fn)
+            self._decode_jit = jax.jit(self._dense_decode_fn)
+
+    # -- jitted step functions ----------------------------------------------------
+    # (bound methods: `self` is closed over, only array args are traced)
+
+    def _paged_prefill_fn(self, params, pages, toks, last_idx, page_ids):
+        """Bucketed prefill: toks (1, pb) zero-padded; retraces once per
+        distinct bucket pb.  Scatters the prompt's KV into its pages (bucket
+        overhang lands in the trash page) and returns the greedy first token
+        with its logprob."""
+        from repro.serving.kvcache import write_prefill_pages
+        logits, cache1 = self.model.prefill(
+            params, {"tokens": toks}, max_len=int(toks.shape[1]),
+            last_idx=last_idx)
+        lp = jax.nn.log_softmax(logits[0, -1])
+        tok = jnp.argmax(lp)
+        pages = write_prefill_pages(pages, cache1, page_ids)
+        return tok, lp[tok], pages
+
+    def _paged_decode_fn(self, params, pages, toks, pos, tbl):
+        """One decode for a compacted active-slot batch (padding rows carry
+        the trash-page table and write/attend harmlessly)."""
+        logits, pages = self.model.decode_step(params, pages, toks, pos,
+                                               block_table=tbl)
+        lp = jax.nn.log_softmax(logits[:, 0], axis=-1)
+        tok = jnp.argmax(lp, axis=-1)
+        return tok, jnp.take_along_axis(lp, tok[:, None], axis=1)[:, 0], pages
+
+    def _dense_prefill_fn(self, params, batch):
+        logits, cache1 = self.model.prefill(params, batch,
+                                            max_len=self.cfg.max_len)
+        lp = jax.nn.log_softmax(logits[0, -1])
+        tok = jnp.argmax(lp)
+        return tok, lp[tok], cache1
+
+    def _dense_decode_fn(self, params, cache, toks, pos):
+        logits, cache = self.model.decode_step(params, cache, toks, pos)
+        lp = jax.nn.log_softmax(logits[:, 0], axis=-1)
+        tok = jnp.argmax(lp, axis=-1)
+        return tok, jnp.take_along_axis(lp, tok[:, None], axis=1)[:, 0], cache
 
     # -- queue interface ----------------------------------------------------------
     def submit(self, req: Request) -> None:
+        total = len(req.prompt) + max(req.max_new_tokens, 1) - 1
+        if total > self.cfg.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt {len(req.prompt)} + "
+                f"{req.max_new_tokens} new tokens needs {total} cache slots "
+                f"> max_len {self.cfg.max_len}")
+        if self.paged and self.kv.pages_needed(total) > self.kv.num_pages - 1:
+            raise ValueError(
+                f"request {req.rid} needs more pages than the pool holds")
         self.queue.append(req)
 
     @property
     def n_in_system(self) -> int:
         return len(self.queue) + len(self.active)
 
+    @property
+    def prefill_trace_count(self) -> int:
+        """Compiled prefill variants -- bounded by the distinct buckets seen."""
+        return int(self._prefill_jit._cache_size())
+
+    @property
+    def decode_trace_count(self) -> int:
+        """Compiled decode variants -- bounded by ceil(log2(max_batch))+1
+        (paged: one per power-of-two active-batch size)."""
+        return int(self._decode_jit._cache_size())
+
+    # -- slot lifecycle -----------------------------------------------------------
+    def _reset_slot(self, slot: int) -> None:
+        """Free a slot's cache state when it empties (completion, eviction,
+        or reclaim of a force-popped slot): release its pages and zero the
+        per-slot position/budget registers."""
+        if self.paged and self.kv.held[slot]:
+            self.kv.release(slot)
+        self.pos[slot] = 0
+        self.remaining[slot] = 0
+
+    def evict(self, slot: int) -> Request:
+        """Straggler mitigation: pull the request off its slot, free the
+        slot's pages, and re-enqueue from scratch (backup dispatch)."""
+        req = self.active.pop(slot)
+        self._reset_slot(slot)
+        req.output.clear()
+        req.score = 0.0
+        req.first_token_s = None
+        self.submit(req)
+        return req
+
     # -- scheduling ---------------------------------------------------------------
+    def _prefill_into(self, slot: int, req: Request, install: bool):
+        """Run one bucketed prefill; install the KV into ``slot`` unless the
+        request finishes at fill time (install=False skips allocation -- the
+        bucket scatter lands entirely in the trash page)."""
+        prompt = np.asarray(req.prompt, np.int32)
+        plen = len(prompt)
+        if self.paged:
+            # bucket >= page_size so the padded prompt is a whole number of
+            # page chunks (both are powers of two; max_len is page-aligned)
+            pb = min(max(_bucket(plen), self.kv.page_size), self.cfg.max_len)
+            padded = np.zeros((1, pb), np.int32)
+            padded[0, :plen] = prompt
+            n_chunks = pb // self.kv.page_size
+            if install:
+                total = plen + req.max_new_tokens - 1
+                page_ids = self.kv.alloc_prefill(slot, plen, total, n_chunks)
+            else:
+                page_ids = np.zeros(n_chunks, np.int32)
+            tok, logp, self.kv.pages = self._prefill_jit(
+                self.params, self.kv.pages, jnp.asarray(padded),
+                jnp.int32(plen - 1), jnp.asarray(page_ids))
+        else:
+            tok, logp, cache1 = self._prefill_jit(
+                self.params, {"tokens": jnp.asarray(prompt)[None]})
+            if install:
+                if self.cache is None:
+                    self.cache = jax.tree.map(
+                        lambda c: jnp.repeat(jnp.zeros_like(c),
+                                             self.cfg.max_batch, axis=1),
+                        cache1)
+                # install the prefilled cache into the slot (batch dim = axis 1)
+                self.cache = jax.tree.map(
+                    lambda full, one: jax.lax.dynamic_update_slice_in_dim(
+                        full, one.astype(full.dtype), slot, axis=1),
+                    self.cache, cache1)
+        return int(tok), float(logp)
+
     def _fill_slots(self, now: float) -> int:
         """Refill free slots from the queue; returns the number of requests
         that finished at fill time (max_new_tokens budget spent by the
@@ -90,74 +241,119 @@ class ServingEngine:
         exactly like decode work."""
         limit = min(self.slot_limit, self.cfg.max_batch)
         free = [s for s in range(self.cfg.max_batch) if s not in self.active]
+        if self.paged:
+            # reclaim pages of slots that were force-popped without release()
+            for s in free:
+                if self.kv.held[s]:
+                    self._reset_slot(s)
         fill_done = 0
         while free and self.queue and len(self.active) + fill_done < limit:
-            req = self.queue.pop(0)
+            req = self.queue[0]
             if req.max_new_tokens <= 0:
                 # nothing to generate: complete without a prefill or a slot
+                self.queue.pop(0)
                 req.done_s = now
                 self.completed.append(req)
                 continue
+            install = req.max_new_tokens > 1
+            if self.paged and install and not self.kv.can_admit(
+                    len(req.prompt) + req.max_new_tokens - 1):
+                break        # defer admission until completions free pages
+            self.queue.pop(0)
             slot = free.pop(0)
-            toks = jnp.asarray(req.prompt, jnp.int32)[None]
-            logits, cache1 = self._prefill_one(self.params, {"tokens": toks})
-            tok = int(jnp.argmax(logits[0, -1]))
+            tok, logp = self._prefill_into(slot, req, install)
             req.output.append(tok)
             req.first_token_s = now
-            if req.max_new_tokens == 1:
+            req.score += (logp - req.score) / len(req.output)
+            if not install:
                 # the prefill token is the whole budget: finish at fill time
                 # (a decode here would emit max_new_tokens + 1 tokens)
                 req.done_s = now
                 self.completed.append(req)
                 fill_done += 1
                 continue
-            if self.cache is None:
-                self.cache = jax.tree.map(
-                    lambda c: jnp.repeat(jnp.zeros_like(c), self.cfg.max_batch, axis=1),
-                    cache1)
-            # install the prefilled cache into the slot (batch dim = axis 1)
-            self.cache = jax.tree.map(
-                lambda full, one: jax.lax.dynamic_update_slice_in_dim(
-                    full, one.astype(full.dtype), slot, axis=1),
-                self.cache, cache1)
             self.pos[slot] = len(req.prompt)
             self.remaining[slot] = req.max_new_tokens - 1
             self.active[slot] = req
         return fill_done
 
+    def _finish(self, slot: int, now: float) -> None:
+        req = self.active.pop(slot)
+        req.done_s = now
+        self.completed.append(req)
+        self._reset_slot(slot)
+
+    def _decode_active_paged(self, now: float) -> int:
+        """One batched heterogeneous-position decode over the active slots
+        only, compacted and padded to a power-of-two batch."""
+        slots = sorted(self.active)
+        n = len(slots)
+        na = 1 << max(int(np.ceil(np.log2(n))), 0)
+        toks = np.zeros((na, 1), np.int32)
+        posv = np.zeros((na,), np.int32)
+        tblv = np.zeros((na, self.kv.pages_per_slot), np.int32)
+        for i, s in enumerate(slots):
+            self.kv.ensure_writable(s, int(self.pos[s]))
+            toks[i, 0] = self.active[s].output[-1]
+            posv[i] = self.pos[s]
+            tblv[i] = self.kv.block_table[s]
+        tok, logp, self.kv.pages = self._decode_jit(
+            self.params, self.kv.pages, jnp.asarray(toks), jnp.asarray(posv),
+            jnp.asarray(tblv))
+        tok = np.asarray(tok)
+        logp = np.asarray(logp)
+        finished = []
+        for i, s in enumerate(slots):
+            req = self.active[s]
+            t = int(tok[i])
+            req.output.append(t)
+            req.score += (float(logp[i]) - req.score) / len(req.output)
+            self.pos[s] += 1
+            self.remaining[s] -= 1
+            if self.remaining[s] <= 0 or t == self.cfg.eos_token:
+                finished.append(s)
+        for s in finished:
+            self._finish(s, now)
+        return n
+
+    def _decode_all_dense(self, now: float) -> int:
+        """Legacy fallback (no paged cache): batch-decode every slot of the
+        dense tree cache -- idle slots compute garbage that is discarded."""
+        toks = np.zeros((self.cfg.max_batch, 1), np.int32)
+        for slot, req in self.active.items():
+            toks[slot, 0] = req.output[-1]
+        tok, logp, self.cache = self._decode_jit(
+            self.params, self.cache, jnp.asarray(toks), jnp.asarray(self.pos))
+        tok = np.asarray(tok)
+        logp = np.asarray(logp)
+        n = len(self.active)
+        finished = []
+        for slot, req in self.active.items():
+            t = int(tok[slot])
+            req.output.append(t)
+            req.score += (float(logp[slot]) - req.score) / len(req.output)
+            self.pos[slot] += 1
+            self.remaining[slot] -= 1
+            if self.remaining[slot] <= 0 or t == self.cfg.eos_token:
+                finished.append(slot)
+        for slot in finished:
+            self._finish(slot, now)
+        return n
+
     def step(self, now: float | None = None) -> int:
-        """One engine step: refill + one decode for all active slots.
-        Returns the number of slots that served work this step (decodes plus
-        fill-time completions)."""
+        """One engine step: refill + one batched decode over the active
+        slots.  Returns the number of slots that served work this step
+        (decodes plus fill-time completions)."""
         now = time.monotonic() if now is None else now
         fill_done = self._fill_slots(now)
         if not self.active:
             if fill_done:
                 self.step_count += 1
             return fill_done
-        # batch decode: positions differ per slot => run per-slot decode at the
-        # max pos and mask.  For simplicity (CPU substrate) we decode slot-wise
-        # when positions are heterogeneous, batched when uniform.
-        toks = np.zeros((self.cfg.max_batch, 1), np.int32)
-        for slot, req in self.active.items():
-            toks[slot, 0] = req.output[-1]
-        # per-slot positions (vector-pos decode: each slot has its own KV length)
-        logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(toks), jnp.asarray(self.pos))
-        next_toks = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
-        finished = []
-        for slot, req in self.active.items():
-            tok = int(next_toks[slot])
-            req.output.append(tok)
-            self.pos[slot] += 1
-            self.remaining[slot] -= 1
-            if self.remaining[slot] <= 0 or tok == self.cfg.eos_token:
-                req.done_s = now
-                finished.append(slot)
-        for slot in finished:
-            self.completed.append(self.active.pop(slot))
+        served = (self._decode_active_paged(now) if self.paged
+                  else self._decode_all_dense(now))
         self.step_count += 1
-        return len(self.active) + len(finished) + fill_done
+        return served + fill_done
 
     def run_until_drained(self, max_steps: int = 10_000) -> None:
         for _ in range(max_steps):

@@ -10,7 +10,13 @@ from repro.core.autoscaler import (
     TargetTrackingPolicy,
     ThresholdPolicy,
 )
-from repro.core.elastic import ClusterConfig, ElasticCluster, ServeRequest
+from repro.core.elastic import (
+    ClusterConfig,
+    ElasticCluster,
+    ServeRequest,
+    measure_provision_delay,
+    provisioned_cluster_config,
+)
 
 
 def _requests(n=2000, horizon=400.0, burst_at=200.0, seed=0):
@@ -125,3 +131,31 @@ def test_100k_request_stream_completes_in_seconds():
     assert np.allclose(res.consumed_t,
                        np.minimum(res.demand_t, res.capacity_t))
     assert wall < 30.0, f"100k-request run took {wall:.1f}s"
+
+
+def test_measured_provision_delay_feeds_cluster_config():
+    """ROADMAP "live-backend depth": the remesh provisioning cost is measured
+    on the real JAX path and wired into ClusterConfig.provision_delay_s."""
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.models import build_model
+
+    cfg = get_smoke_config("smollm-135m")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.key(0))
+    devs = jax.devices()
+    dt, mesh, params2 = measure_provision_delay(
+        model, params, devices=devs[:1], model_parallel=1)
+    assert dt > 0.0
+    assert mesh.devices.size == 1
+    # re-placed params still serve a forward on the new mesh
+    assert jax.tree.all(jax.tree.map(
+        lambda a, b: a.shape == b.shape, params, params2))
+    base = ClusterConfig()
+    ccfg = provisioned_cluster_config(base, dt)
+    assert ccfg.provision_delay_s == pytest.approx(max(dt, 1.0))
+    assert ccfg.replica == base.replica          # only the delay changed
+    # the measured config drives a real cluster run
+    reqs = _requests(300)
+    res = ElasticCluster(ccfg, ThresholdPolicy(0.7), reqs).run()
+    assert res.n_done == len(reqs)

@@ -7,8 +7,14 @@ import pytest
 
 from _hypothesis_compat import given, settings, st
 
-from repro.kernels.decode_attention.ops import decode_attention
-from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.decode_attention.ops import (
+    decode_attention,
+    decode_attention_paged,
+)
+from repro.kernels.decode_attention.ref import (
+    decode_attention_ref,
+    paged_decode_attention_ref,
+)
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.ssd.ops import ssd_intra
@@ -55,6 +61,8 @@ def test_flash_attention_hypothesis(B, S, heads, D):
     (1, 1024, 4, 4, 128, 1000, None),
     (2, 512, 8, 2, 64, 400, 128),
     (1, 256, 8, 1, 64, 17, None),       # pos not block-aligned
+    (2, 384, 8, 2, 64, 201, 96),        # GQA + window + partial, unaligned
+    (1, 256, 6, 3, 32, 250, 300),       # window wider than the filled cache
 ])
 def test_decode_attention_allclose(B, S, Hq, Hkv, D, pos, win):
     ks = jax.random.split(jax.random.PRNGKey(S + pos), 3)
@@ -64,6 +72,44 @@ def test_decode_attention_allclose(B, S, Hq, Hkv, D, pos, win):
     out = decode_attention(q, k, v, pos, window=win, block_k=256)
     ref = decode_attention_ref(q[:, 0], k, v, pos, win)[:, None]
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,D,ps,n,lens,win", [
+    (3, 8, 2, 64, 16, 4, (17, 43, 64), None),     # GQA, partial pages
+    (3, 8, 2, 64, 16, 4, (17, 43, 64), 24),       # GQA + sliding window
+    (2, 4, 4, 32, 16, 3, (1, 48), None),          # MHA, one-token row
+    (2, 8, 1, 64, 32, 2, (33, 50), 40),           # MQA, big pages + window
+])
+def test_paged_decode_attention_matches_oracles(B, Hq, Hkv, D, ps, n, lens, win):
+    """Block-table kernel == gather-over-pages oracle == dense kernel oracle,
+    under GQA, sliding windows, and partially filled last pages."""
+    P = B * n + 2
+    ks = jax.random.split(jax.random.PRNGKey(B * Hq + ps), 3)
+    q = jax.random.normal(ks[0], (B, 1, Hq, D))
+    k_pages = jax.random.normal(ks[1], (P, ps, Hkv, D))
+    v_pages = jax.random.normal(ks[2], (P, ps, Hkv, D))
+    rng = np.random.default_rng(0)
+    # disjoint random physical pages per row; page 0 is the trash page
+    perm = rng.permutation(np.arange(1, P))
+    tbl = jnp.asarray(perm[:B * n].reshape(B, n).astype(np.int32))
+    lengths = jnp.asarray(np.array(lens, np.int32))
+    out = decode_attention_paged(q, k_pages, v_pages, tbl, lengths, window=win)
+    ref = paged_decode_attention_ref(q[:, 0], k_pages, v_pages, tbl, lengths,
+                                     win)
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+    # cross-check each row against the DENSE kernel oracle on the gathered
+    # cache -- the paged path must be exactly the dense computation
+    flat_k = np.asarray(k_pages).reshape(P * ps, Hkv, D)
+    flat_v = np.asarray(v_pages).reshape(P * ps, Hkv, D)
+    for b in range(B):
+        idx = (np.asarray(tbl)[b][:, None] * ps + np.arange(ps)[None]).reshape(-1)
+        dense = decode_attention_ref(q[b:b + 1, 0],
+                                     jnp.asarray(flat_k[idx])[None],
+                                     jnp.asarray(flat_v[idx])[None],
+                                     int(lens[b]), win)
+        np.testing.assert_allclose(np.asarray(out[b, 0]), np.asarray(dense[0]),
+                                   atol=2e-5, rtol=2e-5)
 
 
 @given(st.sampled_from([32, 64, 128]), st.sampled_from([2, 4]),

@@ -1,0 +1,103 @@
+"""Paged KV cache: pure page-ops semantics + pool free-list discipline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving.kvcache import (
+    TRASH_PAGE,
+    PagedKVCache,
+    paged_gather,
+    paged_update,
+    write_prefill_pages,
+)
+
+
+def _pool(max_batch=4, max_len=64, page_size=16, num_pages=None):
+    init = lambda b, s: {"k": jnp.zeros((2, b, s, 2, 8)),
+                         "v": jnp.zeros((2, b, s, 2, 8))}
+    return PagedKVCache(init, max_batch=max_batch, max_len=max_len,
+                        page_size=page_size, num_pages=num_pages)
+
+
+def test_paged_ops_roundtrip_matches_dense():
+    """Writing tokens through paged_update and reading through paged_gather
+    reconstructs exactly the dense cache row, in logical order."""
+    ps, P, B, n = 4, 9, 2, 2
+    rest = (3, 5)
+    rng = np.random.default_rng(0)
+    pages = jnp.zeros((P, ps) + rest)
+    tbl = jnp.asarray(np.array([[3, 1], [7, 2]], np.int32))
+    dense = np.zeros((B, n * ps) + rest, np.float32)
+    for pos in range(n * ps):
+        new = rng.normal(size=(B, 1) + rest).astype(np.float32)
+        pages = paged_update(pages, jnp.asarray(new),
+                             tbl, jnp.full((B,), pos, jnp.int32))
+        dense[:, pos] = new[:, 0]
+    out = np.asarray(paged_gather(pages, tbl))
+    np.testing.assert_array_equal(out, dense)
+
+
+def test_write_prefill_pages_scatter_and_trash_overhang():
+    ps, P, L = 4, 6, 2
+    rest = (2, 3)
+    pages = {"k": jnp.zeros((L, P, ps) + rest)}
+    pb = 3 * ps                                    # bucket: 3 chunks
+    cache = {"k": jnp.asarray(
+        np.random.default_rng(1).normal(size=(L, 1, pb) + rest),
+        jnp.float32)}
+    # prompt spans 2 pages; third chunk is bucket overhang -> trash
+    page_ids = jnp.asarray(np.array([4, 2, TRASH_PAGE], np.int32))
+    out = write_prefill_pages(pages, cache, page_ids)["k"]
+    np.testing.assert_array_equal(np.asarray(out[:, 4]),
+                                  np.asarray(cache["k"][:, 0, :ps]))
+    np.testing.assert_array_equal(np.asarray(out[:, 2]),
+                                  np.asarray(cache["k"][:, 0, ps:2 * ps]))
+    # untouched pages stay zero
+    np.testing.assert_array_equal(np.asarray(out[:, 1]), 0.0)
+
+
+def test_pool_lifecycle_and_invariants():
+    kv = _pool()
+    assert kv.num_pages == 4 * 4 + 1               # all slots full + trash
+    # prefill: 18 tokens -> 2 pages held, worst case 3 pages reserved
+    ids = kv.alloc_prefill(0, 18, 33, n_chunks=2)
+    assert kv.held[0] == 2 and kv.worst[0] == 3
+    assert ids.shape == (2,) and TRASH_PAGE not in ids
+    kv.check_invariants()
+    # decode appends only when crossing a page boundary
+    kv.ensure_writable(0, 18)
+    assert kv.held[0] == 2                         # still inside page 1
+    kv.ensure_writable(0, 32)
+    assert kv.held[0] == 3                         # crossed into page 2
+    kv.check_invariants()
+    # release returns every page and clears the row
+    free_before = kv.n_free
+    kv.release(0)
+    assert kv.n_free == free_before + 3
+    assert kv.held[0] == 0 and kv.worst[0] == 0
+    assert (kv.block_table[0] == TRASH_PAGE).all()
+    kv.check_invariants()
+    assert kv.n_free == kv.num_pages - 1           # nothing leaked
+
+
+def test_reservation_blocks_overcommit_admission():
+    """can_admit accounts for pages already promised to admitted requests,
+    so a mid-decode append can never starve."""
+    kv = _pool(max_batch=2, max_len=64, page_size=16, num_pages=5)  # 4 usable
+    assert kv.can_admit(49)                        # needs 4 pages: exactly fits
+    kv.alloc_prefill(0, 17, 49, n_chunks=2)        # holds 2, reserves 4
+    assert not kv.can_admit(17)                    # 2 free - 2 outstanding = 0
+    kv.ensure_writable(0, 32)                      # append consumes reservation
+    kv.ensure_writable(0, 48)
+    kv.check_invariants()
+    assert not kv.can_admit(17) and kv.n_free == 0
+    kv.release(0)
+    assert kv.can_admit(49)
+
+
+def test_pool_validates_geometry():
+    with pytest.raises(ValueError):
+        _pool(max_len=60, page_size=16)            # not page-aligned
+    with pytest.raises(ValueError):
+        _pool(max_len=96, page_size=12)            # not a power of two

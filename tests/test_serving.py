@@ -112,6 +112,168 @@ def test_max_new_tokens_one_emits_exactly_one_token():
     assert zero.first_token_s is None
 
 
+def _request_set(cfg, n=8, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab,
+                                        int(rng.integers(4, 30))).astype(np.int32),
+                    max_new_tokens=int(rng.integers(1, 7)))
+            for i in range(n)]
+
+
+def test_paged_matches_dense_tokens():
+    """Acceptance: the paged-cache engine emits bit-for-bit the same tokens
+    as the dense-cache engine for the same prompts."""
+    cfg = get_smoke_config("smollm-135m")
+    m = build_model(cfg)
+    params = m.init_params(jax.random.key(0))
+    outs = {}
+    for paged in (True, False):
+        eng = ServingEngine(m, params,
+                            ServeConfig(max_batch=4, max_len=64, paged=paged))
+        assert eng.paged == paged
+        for r in _request_set(cfg):
+            eng.submit(r)
+        eng.run_until_drained()
+        outs[paged] = {r.rid: list(r.output) for r in eng.completed}
+        if paged:
+            eng.kv.check_invariants()
+            assert eng.kv.n_free == eng.kv.num_pages - 1   # all pages freed
+    assert outs[True] == outs[False]
+
+
+def test_prefill_trace_count_bounded_by_buckets():
+    """Acceptance: prefill jit retraces are bounded by the number of distinct
+    request_class prefill buckets, not the number of distinct prompt lengths;
+    decode retraces are bounded by the power-of-two active-batch sizes."""
+    cfg = get_smoke_config("smollm-135m")
+    m = build_model(cfg)
+    params = m.init_params(jax.random.key(0))
+    eng = ServingEngine(m, params, ServeConfig(max_batch=4, max_len=64))
+    rng = np.random.default_rng(2)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab, plen).astype(np.int32),
+                    max_new_tokens=3)
+            # 8 distinct prompt lengths spanning exactly two 2^k buckets
+            for i, plen in enumerate([3, 5, 7, 9, 12, 16, 17, 21, 25, 31])]
+    buckets = {min(r.request_class[0], 64) for r in reqs}
+    assert len(buckets) == 2
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_drained()
+    assert len(eng.completed) == len(reqs)
+    assert eng.prefill_trace_count <= len(buckets)
+    assert eng.decode_trace_count <= int(np.ceil(np.log2(4))) + 1
+
+
+def test_eos_early_stop_frees_slot_and_pages():
+    """A request whose decode emits eos_token finishes early, its slot
+    empties, its pages return to the pool, and pos/remaining reset."""
+    cfg = get_smoke_config("smollm-135m")
+    m = build_model(cfg)
+    params = m.init_params(jax.random.key(0))
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab, 9).astype(np.int32)
+    # discover what greedy decoding emits, then replay with eos = 2nd token
+    probe = Request(rid=0, prompt=prompt.copy(), max_new_tokens=6)
+    eng = ServingEngine(m, params, ServeConfig(max_batch=2, max_len=64))
+    eng.submit(probe)
+    eng.run_until_drained()
+    assert len(probe.output) == 6
+    eos = probe.output[1]
+    eng2 = ServingEngine(m, params,
+                         ServeConfig(max_batch=2, max_len=64, eos_token=eos))
+    replay = Request(rid=1, prompt=prompt.copy(), max_new_tokens=6)
+    eng2.submit(replay)
+    eng2.run_until_drained()
+    assert replay.output == probe.output[:2]       # stopped at the eos token
+    assert replay.done_s is not None
+    assert not eng2.active and not eng2.queue
+    assert eng2.pos[0] == 0 and eng2.remaining[0] == 0   # slot state reset
+    assert eng2.kv.n_free == eng2.kv.num_pages - 1       # pages freed
+    eng2.kv.check_invariants()
+
+
+def test_engine_scores_are_mean_decode_logprobs():
+    """Request.score is the engine-computed running mean logprob of the
+    emitted tokens (the application-output signal the driver records)."""
+    cfg = get_smoke_config("smollm-135m")
+    m = build_model(cfg)
+    params = m.init_params(jax.random.key(0))
+    rng = np.random.default_rng(4)
+    req = Request(rid=0, prompt=rng.integers(0, cfg.vocab, 7).astype(np.int32),
+                  max_new_tokens=4)
+    eng = ServingEngine(m, params, ServeConfig(max_batch=2, max_len=64))
+    eng.submit(req)
+    eng.run_until_drained()
+    # reference: sequential greedy logprobs from the full forward
+    toks = list(req.prompt)
+    lps = []
+    for t in req.output:
+        logits, _ = m.forward(params, {"tokens": jnp.asarray(toks, jnp.int32)[None]})
+        lp = jax.nn.log_softmax(logits[0, -1])
+        assert t == int(jnp.argmax(lp))
+        lps.append(float(lp[t]))
+        toks.append(t)
+    assert req.score < 0.0
+    np.testing.assert_allclose(req.score, np.mean(lps), atol=2e-2)
+
+
+def test_submit_rejects_oversized_request():
+    cfg = get_smoke_config("smollm-135m")
+    m = build_model(cfg)
+    params = m.init_params(jax.random.key(0))
+    eng = ServingEngine(m, params, ServeConfig(max_batch=2, max_len=32))
+    rng = np.random.default_rng(5)
+    with pytest.raises(ValueError):
+        eng.submit(Request(rid=0,
+                           prompt=rng.integers(0, cfg.vocab, 30).astype(np.int32),
+                           max_new_tokens=8))
+
+
+def test_page_pressure_defers_admission_then_drains():
+    """With a pool too small for all requests at once, admission defers until
+    completions free pages -- and every request still completes."""
+    cfg = get_smoke_config("smollm-135m")
+    m = build_model(cfg)
+    params = m.init_params(jax.random.key(0))
+    # 3 usable pages of 16 tokens: only one 17+-token request fits at a time
+    eng = ServingEngine(m, params,
+                        ServeConfig(max_batch=4, max_len=64, num_pages=4))
+    rng = np.random.default_rng(6)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab, 20).astype(np.int32),
+                    max_new_tokens=5) for i in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    eng.step(now=0.0)
+    assert len(eng.active) == 1          # pool pressure: only one admitted
+    eng.run_until_drained()
+    assert len(eng.completed) == 3
+    assert all(len(r.output) == 5 for r in reqs)
+    eng.kv.check_invariants()
+    assert eng.kv.n_free == eng.kv.num_pages - 1
+
+
+def test_page_size_larger_than_bucket_floor():
+    """Regression: page_size=32 with a short prompt (16-bucket) used to
+    produce zero page chunks and crash the prefill scatter; the bucket is
+    now clamped up to the page size."""
+    cfg = get_smoke_config("smollm-135m")
+    m = build_model(cfg)
+    params = m.init_params(jax.random.key(0))
+    eng = ServingEngine(m, params,
+                        ServeConfig(max_batch=2, max_len=128, page_size=32))
+    rng = np.random.default_rng(7)
+    req = Request(rid=0, prompt=rng.integers(0, cfg.vocab, 10).astype(np.int32),
+                  max_new_tokens=4)
+    eng.submit(req)
+    eng.run_until_drained()
+    assert len(req.output) == 4
+    eng.kv.check_invariants()
+    assert eng.kv.n_free == eng.kv.num_pages - 1
+
+
 def test_vector_pos_decode_matches_scalar():
     cfg = get_smoke_config("qwen2.5-3b")
     m = build_model(cfg)
