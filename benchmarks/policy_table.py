@@ -7,8 +7,16 @@ prefill/decode with engine-computed logprob scores) -- and the per-backend
 RunReports are flattened through :func:`repro.core.scaling.compare` into one
 table, emitted as a JSON artifact under ``benchmarks/artifacts/``.
 
+Every row now carries a ``cost`` column priced from the per-pool capacity
+accounting, and a *spot-revocation* scenario runs on both simulation
+backends: a cheap preemptible pool alongside on-demand capacity, a
+cheapest-first router buying into it, and the seeded revocation process
+killing those units mid-burst -- the controller re-buys, the report shows
+the on-demand/spot cost split and the revocation count.
+
 This is the redesign's payoff made visible: one control plane, one report
-schema, three very different service processes in a single comparison.
+schema, three very different service processes -- now in one *priced*
+comparison.
 """
 from __future__ import annotations
 
@@ -20,15 +28,33 @@ import numpy as np
 from benchmarks.common import Rows, banner
 from repro.core.autoscaler import (
     AppDataPolicy,
+    CheapestFirstRouter,
     CompositePolicy,
     LoadPolicy,
     TargetTrackingPolicy,
     ThresholdPolicy,
 )
-from repro.core.scaling import RunReport, compare
+from repro.core.scaling import RunReport, Sla, UnitPool, compare
 
 ARTIFACT = os.path.join(os.path.dirname(__file__), "artifacts",
                         "policy_table.json")
+
+#: ~3x price ratio between guaranteed and preemptible capacity, the typical
+#: cloud spot discount; the revocation hazard (mean spot-unit lifetime) is
+#: sized per backend so units bought for a burst are revoked inside it
+ON_DEMAND_RATE = 3.0
+SPOT_RATE = 1.0
+
+
+def _spot_pools(max_spot: int, *, delay_s: float, lifetime_s: float,
+                min_od: int = 1, seed: int = 7) -> tuple[UnitPool, ...]:
+    return (
+        UnitPool("on-demand", provision_delay_s=delay_s,
+                 cost_rate=ON_DEMAND_RATE, min_units=min_od),
+        UnitPool("spot", provision_delay_s=delay_s, cost_rate=SPOT_RATE,
+                 max_units=max_spot, preemptible=True,
+                 revoke_rate=1.0 / lifetime_s, revoke_seed=seed),
+    )
 
 
 def _simulator_reports(quick: bool) -> dict[str, RunReport]:
@@ -65,6 +91,47 @@ def _elastic_reports(quick: bool) -> dict[str, RunReport]:
         cluster = ElasticCluster(cfg, mk(holder), _workload(n=n))
         holder[0] = cluster
         out[f"elastic.{name}"] = cluster.run()
+    return out
+
+
+def _spot_reports(quick: bool) -> dict[str, RunReport]:
+    """Spot-revocation scenario on both simulation backends: the same
+    threshold rule once on pure on-demand capacity and once behind a
+    cheapest-first router over (on-demand, spot) pools whose preemptible
+    units get revoked mid-burst."""
+    from benchmarks.elastic_serving import _workload
+    from repro.core.elastic import ClusterConfig, ElasticCluster
+    from repro.core.simulator import SimConfig, generate_trace, run_scenario
+
+    out: dict[str, RunReport] = {}
+    # -- simulator (unit = CPU): price the paper's Table III configuration ---------
+    trace = generate_trace("england" if quick else "uruguay", seed=0)
+    sla = Sla(300.0, {"full_pipeline": 150.0})     # tighter deadline for the
+    # tweets that traverse the full operator graph -- per-class SLA reporting
+    base = SimConfig(sla=sla,
+                     pools=(UnitPool("on-demand", provision_delay_s=60.0,
+                                     cost_rate=ON_DEMAND_RATE, min_units=1),))
+    out["sim.spot.ondemand-only"] = run_scenario(
+        trace, ThresholdPolicy(0.7), base)
+    spot = SimConfig(sla=sla, pools=_spot_pools(8, delay_s=60.0,
+                                                lifetime_s=600.0))
+    out["sim.spot.cheapest"] = run_scenario(
+        trace, CheapestFirstRouter(ThresholdPolicy(0.7)), spot)
+
+    # -- elastic fleet (unit = replica) --------------------------------------------
+    n = 2_000 if quick else 8_000
+    ecfg = ClusterConfig()
+    e_base = ClusterConfig(pools=(
+        UnitPool("on-demand", provision_delay_s=ecfg.provision_delay_s,
+                 cost_rate=ON_DEMAND_RATE, min_units=1),))
+    out["elastic.spot.ondemand-only"] = ElasticCluster(
+        e_base, ThresholdPolicy(0.7), _workload(n=n)).run()
+    # the ~20-min request stream needs a proportionally shorter spot lifetime
+    # for churn to land inside its bursts
+    e_spot = ClusterConfig(pools=_spot_pools(
+        16, delay_s=ecfg.provision_delay_s, lifetime_s=120.0))
+    out["elastic.spot.cheapest"] = ElasticCluster(
+        e_spot, CheapestFirstRouter(ThresholdPolicy(0.7)), _workload(n=n)).run()
     return out
 
 
@@ -108,6 +175,7 @@ def run(quick: bool = False) -> Rows:
     reports: dict[str, RunReport] = {}
     reports.update(_simulator_reports(quick))
     reports.update(_elastic_reports(quick))
+    reports.update(_spot_reports(quick))
     reports.update(_serve_reports(quick))
 
     table = compare(reports)
@@ -115,6 +183,22 @@ def run(quick: bool = False) -> Rows:
         rows.add(f"{row['name']}.viol_pct", row["violation_pct"])
         rows.add(f"{row['name']}.p99_latency_s", row["p99_latency_s"])
         rows.add(f"{row['name']}.max_units", float(row["max_units"]))
+        rows.add(f"{row['name']}.cost", row["cost"])
+        if row.get("n_revocations"):
+            rows.add(f"{row['name']}.n_revocations",
+                     float(row["n_revocations"]))
+        if "worst_class_viol_pct" in row:
+            rows.add(f"{row['name']}.worst_class_viol_pct",
+                     row["worst_class_viol_pct"], str(row["worst_class"]))
+
+    # the preemptible pool must actually have been revoked mid-burst, and the
+    # mixed fleet must undercut the pure on-demand bill on both backends
+    for bk in ("sim", "elastic"):
+        assert reports[f"{bk}.spot.cheapest"].n_revocations > 0, bk
+        saving = (reports[f"{bk}.spot.ondemand-only"].cost
+                  - reports[f"{bk}.spot.cheapest"].cost)
+        assert saving > 0.0, f"{bk}: mixed fleet cost more than on-demand"
+        rows.add(f"{bk}.spot.cost_saving", saving)
 
     os.makedirs(os.path.dirname(ARTIFACT), exist_ok=True)
     payload = {

@@ -24,8 +24,11 @@ MODULES = [
 ]
 
 #: fast subset exercising every control-plane path (simulator backend, elastic
-#: backend, multi-channel signals) -- the scripts/check.sh verify gate
-SMOKE_MODULES = ["littles_law", "fig8_appdata", "elastic_serving"]
+#: backend, multi-channel signals, and the priced spot-revocation capacity
+#: scenario incl. the live serve backend) -- the scripts/check.sh verify gate;
+#: policy_table also emits the benchmarks/artifacts/ JSON that CI uploads
+SMOKE_MODULES = ["littles_law", "fig8_appdata", "elastic_serving",
+                 "policy_table"]
 
 
 def main() -> None:

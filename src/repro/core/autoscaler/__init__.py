@@ -1,6 +1,7 @@
 from repro.core.autoscaler.base import CompositePolicy, Decision, Observation, Policy
 from repro.core.autoscaler.policies import (
     AppDataPolicy,
+    CheapestFirstRouter,
     LoadPolicy,
     ScheduledPolicy,
     TargetTrackingPolicy,
@@ -9,6 +10,6 @@ from repro.core.autoscaler.policies import (
 
 __all__ = [
     "CompositePolicy", "Decision", "Observation", "Policy",
-    "AppDataPolicy", "LoadPolicy", "ScheduledPolicy",
+    "AppDataPolicy", "CheapestFirstRouter", "LoadPolicy", "ScheduledPolicy",
     "TargetTrackingPolicy", "ThresholdPolicy",
 ]

@@ -14,6 +14,7 @@ from dataclasses import dataclass, field
 from typing import TYPE_CHECKING, Mapping
 
 if TYPE_CHECKING:  # no runtime import: scaling.controller imports this module
+    from repro.core.scaling.capacity import PoolStats
     from repro.core.scaling.signals import WindowStats
 
 
@@ -42,6 +43,9 @@ class Observation:
     app_prev_window_mean: float = 0.0  # mean app-signal, window before that
     app_window_count: int = 0         # how many signal samples backed app_window_mean
     signals: Mapping[str, WindowStats] = field(default_factory=dict)
+    pools: Mapping[str, PoolStats] = field(default_factory=dict)
+    # ``pools``: per-pool capacity view (live/pending/price/preemptible) when the
+    # controller runs a typed CapacityPlan; n_units/n_pending stay the totals.
 
     def signal(self, channel: str | None = None) -> WindowStats:
         """Windowed stats for a named channel; ``None`` selects the backend's
@@ -63,14 +67,53 @@ class Observation:
 
 @dataclass(frozen=True)
 class Decision:
-    """delta > 0 allocates (subject to provisioning delay); delta < 0 releases."""
+    """delta > 0 allocates (subject to provisioning delay); delta < 0 releases.
+
+    The scalar ``delta`` targets the controller's *default* pool.  A
+    pool-aware policy may instead set ``pools`` to per-pool deltas (e.g.
+    ``{"spot": +4}``); when ``pools`` is not None it is authoritative and
+    ``delta`` is ignored.  ``total`` is the net delta either way -- the sign
+    every scalar consumer (composition, veto logic) keys on.
+    """
 
     delta: int = 0
     reason: str = ""
+    pools: Mapping[str | None, int] | None = None
+
+    @property
+    def total(self) -> int:
+        if self.pools is not None:
+            return sum(self.pools.values())
+        return self.delta
+
+    def pool_deltas(self, default_pool: str) -> dict[str, int]:
+        """Per-pool deltas with the scalar form mapped onto ``default_pool``.
+        (A ``None`` key -- produced when composition merges a scalar vote with
+        pool-targeted ones -- also resolves to the default pool.)"""
+        if self.pools is None:
+            return {default_pool: int(self.delta)} if self.delta else {}
+        out: dict[str, int] = {}
+        for name, d in self.pools.items():
+            key = default_pool if name is None else name
+            out[key] = out.get(key, 0) + int(d)
+        return {k: v for k, v in out.items() if v != 0}
 
     def __add__(self, other: "Decision") -> "Decision":
         reason = ";".join(r for r in (self.reason, other.reason) if r)
-        return Decision(self.delta + other.delta, reason)
+        if self.pools is None and other.pools is None:
+            return Decision(self.delta + other.delta, reason)
+        # merge in pool space; scalar sides keep targeting the default pool,
+        # represented by the None key until the controller resolves it
+        merged: dict[str | None, int] = {}
+        for d in (self, other):
+            items = (d.pools.items() if d.pools is not None
+                     else ((None, d.delta),) if d.delta else ())
+            for name, dd in items:
+                merged[name] = merged.get(name, 0) + int(dd)
+        merged = {k: v for k, v in merged.items() if v != 0}
+        if set(merged) <= {None}:
+            return Decision(merged.get(None, 0), reason)
+        return Decision(0, reason, pools=merged)
 
 
 class Policy:
@@ -106,10 +149,10 @@ class CompositePolicy(Policy):
         for p in self.policies:
             d = p.decide(obs)
             # A positive vote from any sub-policy wins over another's -1 release.
-            if d.delta > 0 and total.delta < 0:
-                total = dataclasses.replace(total, delta=0)
-            if total.delta > 0 and d.delta < 0:
-                d = dataclasses.replace(d, delta=0)
+            if d.total > 0 and total.total < 0:
+                total = dataclasses.replace(total, delta=0, pools=None)
+            if total.total > 0 and d.total < 0:
+                d = dataclasses.replace(d, delta=0, pools=None)
             total = total + d
         return total
 

@@ -163,6 +163,53 @@ class AppDataPolicy(Policy):
         return f"appdata(+{self.extra_units}{ch})"
 
 
+class CheapestFirstRouter(Policy):
+    """Route an inner policy's upscale votes into the cheapest capacity first.
+
+    The inner policy stays pool-blind (it votes a scalar delta from its usual
+    observation tiers); this wrapper re-expresses a positive vote as per-pool
+    deltas, filling pools in ascending ``cost_rate`` order up to each pool's
+    headroom (live + pending below its ceiling) and spilling the remainder
+    into the next-cheapest pool.  Downscale votes pass through untouched --
+    the controller already releases the most expensive capacity first, so the
+    pair yields buy-cheap / sell-expensive behavior over e.g. a (spot,
+    on-demand) pool pair.  Without a typed capacity plan (``obs.pools``
+    empty) it is the identity wrapper.
+    """
+
+    name = "cheapest-first"
+
+    def __init__(self, inner: Policy):
+        self.inner = inner
+
+    def reset(self) -> None:
+        self.inner.reset()
+
+    def decide(self, obs: Observation) -> Decision:
+        d = self.inner.decide(obs)
+        if d.pools is not None or d.total <= 0 or not obs.pools:
+            return d
+        remaining = d.total
+        deltas: dict[str, int] = {}
+        by_price = sorted(obs.pools.items(), key=lambda kv: kv[1].cost_rate)
+        for pool_name, ps in by_price:
+            take = min(remaining, ps.headroom)
+            if take > 0:
+                deltas[pool_name] = take
+                remaining -= take
+            if remaining == 0:
+                break
+        if remaining > 0 and by_price:
+            # every pool at its ceiling: leave the excess on the cheapest pool
+            # (landing clamps it), preserving the vote's magnitude in the log
+            name0 = by_price[0][0]
+            deltas[name0] = deltas.get(name0, 0) + remaining
+        return Decision(0, d.reason, pools=deltas)
+
+    def describe(self) -> str:
+        return f"cheapest({self.inner.describe()})"
+
+
 class TargetTrackingPolicy(Policy):
     """ASG-style target tracking (SNIPPETS: "Target tracking (e.g., 50% CPU)").
 

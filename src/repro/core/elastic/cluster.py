@@ -49,6 +49,8 @@ from repro.core.scaling import (
     ScalingController,
     ServiceProcess,
     SignalBus,
+    Sla,
+    UnitPool,
 )
 
 
@@ -71,6 +73,7 @@ class ServeRequest:
     score: float = 0.5            # application-output signal carried by the reply
     done_s: float | None = None
     signals: dict[str, float] = field(default_factory=dict)   # extra named channels
+    request_class: str = "standard"   # SLA class (per-class deadlines via Sla)
 
     def work_prefill(self) -> float:
         return float(self.prefill_len)
@@ -90,6 +93,9 @@ class ClusterConfig:
     app_window_s: float = 60.0
     step_s: float = 1.0
     signal_channel: str = "output_score"     # primary channel (legacy app_* tier)
+    pools: tuple[UnitPool, ...] | None = None   # typed replica pools (None: one
+                                                # on-demand pool from the knobs above)
+    sla: Sla | None = None                   # per-class deadlines (None: flat sla_s)
 
 
 class _ClassModel:
@@ -186,6 +192,7 @@ class ElasticCluster:
                                  dtype=np.float64)
         self._score = np.array([r.score for r in self.incoming],
                                dtype=np.float64)
+        self._cls = np.array([r.request_class for r in self.incoming])
         self.class_model = _ClassModel(cfg.replica)
         self._work = self.class_model.price(
             np.array([r.prefill_len for r in self.incoming], dtype=np.float64),
@@ -217,6 +224,7 @@ class ElasticCluster:
                 step_s=cfg.step_s,
                 app_window_s=cfg.app_window_s,
                 signal_channel=cfg.signal_channel,
+                pools=cfg.pools,
             ),
             bus,
             starting_units=cfg.starting_replicas,
@@ -296,7 +304,8 @@ class ElasticCluster:
 
         for i, r in enumerate(self.incoming):     # keep the request-object API
             r.done_s = float(done_t[i]) if done_t[i] > 0.0 else None
-        lat = (done_t - arrival)[done_t > 0.0]
+        done_mask = done_t > 0.0
+        lat = (done_t - arrival)[done_mask]
         return ElasticResult(
             backend="elastic",
             workload=f"{n} requests",
@@ -309,7 +318,10 @@ class ElasticCluster:
             n_decisions_down=ctrl.n_down,
             unit_name="replica",
             decisions=ctrl.decision_log,
+            sla=cfg.sla,
+            classes=self._cls[done_mask],
             extra={"chip_hours": replica_seconds * cfg.replica.chips / 3600.0},
+            **ctrl.plan.report_kwargs(),
             util_t=np.asarray(util_hist, dtype=np.float32),
             demand_t=np.asarray(demand_hist, dtype=np.float64),
             consumed_t=np.asarray(consumed_hist, dtype=np.float64),

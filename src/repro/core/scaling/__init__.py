@@ -1,8 +1,17 @@
 """The scaling control plane: monitoring (SignalBus), decision/actuation
-(ScalingController), the shared water-filling service core (ServiceProcess),
-and the backend/result contract (ScalableBackend, RunReport) every scaled
+(ScalingController over a typed CapacityPlan of UnitPools), the shared
+water-filling service core (ServiceProcess), and the backend/result contract
+(ScalableBackend, RunReport with priced cost and per-class SLAs) every scaled
 system shares.  See DESIGN.md."""
 from repro.core.scaling.signals import DEFAULT_CHANNEL, SignalBus, WindowStats
+from repro.core.scaling.capacity import (
+    DEFAULT_POOL,
+    CapacityPlan,
+    PoolStats,
+    RevocationEvent,
+    Sla,
+    UnitPool,
+)
 from repro.core.scaling.controller import (
     ControllerConfig,
     DecisionRecord,
@@ -18,6 +27,8 @@ from repro.core.scaling.registry import (
 
 __all__ = [
     "DEFAULT_CHANNEL", "SignalBus", "WindowStats",
+    "DEFAULT_POOL", "CapacityPlan", "PoolStats", "RevocationEvent", "Sla",
+    "UnitPool",
     "ControllerConfig", "DecisionRecord", "ScalingController",
     "ServiceProcess", "StepResult", "water_level",
     "RunReport", "ScalableBackend", "compare",

@@ -10,6 +10,13 @@ benchmarks and examples compare policies across backends with one code path.
 RunReport also supports ``report["key"]`` lookups over its summary dict so
 pre-redesign call sites that consumed the ElasticCluster result dict keep
 working unchanged.
+
+The capacity redesign adds the *priced* view: per-pool unit-seconds and cost
+rates (filled from ``CapacityPlan.report_kwargs()``) roll up into ``cost``,
+and an optional :class:`~repro.core.scaling.capacity.Sla` spec plus per-item
+``classes`` labels yield per-request-class violation rates and the
+worst-class breakdown -- the paper's economics (SLA violations vs money
+spent) made first-class in every backend's report.
 """
 from __future__ import annotations
 
@@ -18,6 +25,7 @@ from typing import Any, Iterator, Mapping, Protocol, runtime_checkable
 
 import numpy as np
 
+from repro.core.scaling.capacity import Sla
 from repro.core.scaling.controller import DecisionRecord
 
 
@@ -37,6 +45,12 @@ class RunReport:
     unit_name: str = "unit"       # what one unit is (cpu / replica / slot)
     decisions: list[DecisionRecord] = field(default_factory=list)
     extra: dict[str, Any] = field(default_factory=dict)   # backend-specific rows
+    sla: Sla | None = None        # per-class deadline spec (None: flat sla_s)
+    classes: np.ndarray | None = None   # per-item request-class labels, aligned
+                                        # with ``latencies``
+    pool_unit_seconds: dict[str, float] = field(default_factory=dict)
+    pool_cost_rates: dict[str, float] = field(default_factory=dict)
+    n_revocations: int = 0
     _summary_cache: dict[str, Any] | None = field(
         default=None, init=False, repr=False, compare=False)
 
@@ -45,11 +59,50 @@ class RunReport:
     def n_done(self) -> int:
         return int(self.latencies.size)
 
+    def _deadlines(self) -> np.ndarray | float:
+        """Per-item deadline array (per-class Sla + labels) or the flat SLA."""
+        if self.sla is None:
+            return self.sla_s
+        if self.classes is not None and self.sla.per_class:
+            return self.sla.deadlines(self.classes)
+        return self.sla.default_s
+
     @property
     def violation_rate(self) -> float:
         if self.latencies.size == 0:
             return 0.0
-        return float(np.mean(self.latencies > self.sla_s))
+        return float(np.mean(self.latencies > self._deadlines()))
+
+    def violation_rate_by_class(self) -> dict[str, float]:
+        """Violation rate per request class (empty when classes are unknown)."""
+        if self.classes is None or self.latencies.size == 0:
+            return {}
+        cls = np.asarray(self.classes)
+        out = {}
+        for c in np.unique(cls):
+            m = cls == c
+            thr = self.sla.deadline_s(str(c)) if self.sla is not None else self.sla_s
+            out[str(c)] = float(np.mean(self.latencies[m] > thr))
+        return out
+
+    @property
+    def worst_class(self) -> tuple[str, float] | None:
+        """(request class, violation rate) of the worst-served class."""
+        by_cls = self.violation_rate_by_class()
+        if not by_cls:
+            return None
+        name = max(by_cls, key=by_cls.get)
+        return name, by_cls[name]
+
+    @property
+    def cost(self) -> float:
+        """Priced capacity: sum over pools of unit-hours x cost_rate.  Without
+        pool accounting (a legacy single-pool backend), one unit-hour costs
+        1.0 so ``cost == unit_hours``."""
+        if self.pool_unit_seconds:
+            return sum(us / 3600.0 * self.pool_cost_rates.get(name, 1.0)
+                       for name, us in self.pool_unit_seconds.items())
+        return self.unit_hours
 
     @property
     def mean_latency_s(self) -> float:
@@ -86,7 +139,19 @@ class RunReport:
             f"max_{self.unit_name}s": self.max_units,
             "n_scale_ups": self.n_decisions_up,
             "n_scale_downs": self.n_decisions_down,
+            "cost": self.cost,
         }
+        by_cls = self.violation_rate_by_class()
+        if by_cls:
+            for cls, rate in sorted(by_cls.items()):
+                out[f"viol_pct.{cls}"] = 100.0 * rate
+            worst, worst_rate = self.worst_class
+            out["worst_class"] = worst
+            out["worst_class_viol_pct"] = 100.0 * worst_rate
+        if len(self.pool_unit_seconds) > 1 or self.n_revocations:
+            for name, us in sorted(self.pool_unit_seconds.items()):
+                out[f"unit_hours.{name}"] = us / 3600.0
+            out["n_revocations"] = self.n_revocations
         out.update(self.extra)
         self._summary_cache = out
         return dict(out)

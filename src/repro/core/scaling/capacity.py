@@ -1,0 +1,300 @@
+"""The typed capacity model behind the actuation tier.
+
+The paper's headline result is economic -- fewer SLA violations at fewer
+resources -- but a scalar ``units: int`` cannot express the economics: real
+fleets mix unit *kinds* with different prices, provisioning delays, and
+reliability (on-demand vs spot/preemptible), and real SLAs are per request
+class, not global.  This module types that out:
+
+* :class:`UnitPool` -- one kind of capacity: a name, its provisioning delay,
+  its price per unit-hour, floor/ceiling, and (for preemptible pools) a
+  seeded revocation process (each live unit survives a step with probability
+  ``exp(-revoke_rate * step_s)``; revocations land at step start, the DEPAS
+  node-churn scenario).
+* :class:`CapacityPlan` -- the live state over an *ordered* sequence of
+  pools: per-pool live counts, per-pool pending queues (allocations inside
+  their provisioning delay), per-pool unit-second meters, and the revocation
+  log.  Downscale releases the most expensive capacity first, and within a
+  pool cancels still-pending allocations (newest-first) before touching live
+  units -- releasing a live unit while a pending one lands moments later is
+  pure waste.
+* :class:`Sla` -- the service-level spec: a default completion deadline plus
+  per-request-class overrides, so a report can price violations per class.
+
+A plan with a single on-demand pool is mechanically identical to the
+pre-redesign scalar controller state (same landing, clamping and floor
+behavior), which is what keeps the golden parity tests bit-for-bit.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Iterator, Mapping, Sequence
+
+import numpy as np
+
+#: pool name used when a config does not say otherwise
+DEFAULT_POOL = "on-demand"
+
+
+@dataclass(frozen=True)
+class UnitPool:
+    """One kind of capacity ('unit' stays backend-defined: CPU / replica / slot)."""
+
+    name: str
+    provision_delay_s: float = 60.0
+    cost_rate: float = 1.0            # price per unit-hour
+    min_units: int = 0                # floor for *voluntary* release (revocation
+                                      # is involuntary and ignores it)
+    max_units: int = 4096
+    starting_units: int | None = None  # None: plan-level default (first pool
+                                       # gets the controller's starting_units)
+    preemptible: bool = False
+    revoke_rate: float = 0.0          # per-unit hazard, 1/s (0 = never revoked)
+    revoke_seed: int = 0
+
+    def __post_init__(self):
+        if not self.name:
+            raise ValueError("UnitPool needs a non-empty name")
+        if self.provision_delay_s < 0.0:
+            raise ValueError(f"provision_delay_s must be >= 0, got "
+                             f"{self.provision_delay_s}")
+        if self.cost_rate < 0.0:
+            raise ValueError(f"cost_rate must be >= 0, got {self.cost_rate}")
+        if not 0 <= self.min_units <= self.max_units:
+            raise ValueError(f"need 0 <= min_units <= max_units, got "
+                             f"[{self.min_units}, {self.max_units}]")
+        if self.revoke_rate < 0.0:
+            raise ValueError(f"revoke_rate must be >= 0, got {self.revoke_rate}")
+        if self.revoke_rate > 0.0 and not self.preemptible:
+            raise ValueError(f"pool {self.name!r} has revoke_rate > 0 but is "
+                             f"not marked preemptible")
+
+
+@dataclass(frozen=True)
+class PoolStats:
+    """Per-pool view a policy sees in ``Observation.pools``."""
+
+    units: int
+    pending: int
+    cost_rate: float
+    min_units: int = 0
+    max_units: int = 4096
+    preemptible: bool = False
+    revoked: int = 0                  # cumulative revocations so far
+
+    @property
+    def headroom(self) -> int:
+        """Units this pool can still take (live + pending below the ceiling)."""
+        return max(self.max_units - self.units - self.pending, 0)
+
+
+@dataclass(frozen=True)
+class RevocationEvent:
+    """``count`` preemptible units of ``pool`` revoked at step start ``time``."""
+
+    time: float
+    pool: str
+    count: int
+
+
+@dataclass(frozen=True)
+class Sla:
+    """Completion-deadline spec: a default plus per-request-class overrides."""
+
+    default_s: float
+    per_class: Mapping[str, float] = field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.default_s <= 0.0:
+            raise ValueError(f"default_s must be positive, got {self.default_s}")
+        for cls, d in self.per_class.items():
+            if d <= 0.0:
+                raise ValueError(f"deadline for class {cls!r} must be positive, "
+                                 f"got {d}")
+
+    def deadline_s(self, request_class: str) -> float:
+        return self.per_class.get(request_class, self.default_s)
+
+    def deadlines(self, classes: np.ndarray) -> np.ndarray:
+        """Vectorized per-item deadlines for an array of class labels."""
+        if not self.per_class:
+            return np.full(len(classes), self.default_s)
+        lut = {c: self.deadline_s(c) for c in np.unique(classes)}
+        return np.array([lut[c] for c in np.asarray(classes)], dtype=np.float64)
+
+
+class _PoolState:
+    """Mutable runtime state of one pool inside a CapacityPlan."""
+
+    __slots__ = ("pool", "live", "pending", "unit_seconds", "revoked", "rng")
+
+    def __init__(self, pool: UnitPool, live: int):
+        self.pool = pool
+        self.live = int(live)
+        self.pending: list[tuple[float, int]] = []   # (available_at, count)
+        self.unit_seconds = 0.0
+        self.revoked = 0
+        self.rng = np.random.default_rng(pool.revoke_seed)
+
+    @property
+    def n_pending(self) -> int:
+        return sum(c for _, c in self.pending)
+
+
+class CapacityPlan:
+    """Live capacity across an ordered sequence of typed unit pools.
+
+    The first pool is the *default* pool: scalar policy decisions map onto it,
+    and it receives the controller's ``starting_units`` unless its
+    ``starting_units`` field says otherwise.
+    """
+
+    def __init__(self, pools: Sequence[UnitPool], *, starting_units: int = 0):
+        pools = tuple(pools)
+        if not pools:
+            raise ValueError("CapacityPlan needs at least one UnitPool")
+        names = [p.name for p in pools]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate pool names: {names}")
+        self.pools = pools
+        self.default_pool = pools[0].name
+        self._state: dict[str, _PoolState] = {}
+        self.revocations: list[RevocationEvent] = []
+        self.reset(starting_units)
+
+    # -- lifecycle ------------------------------------------------------------------
+    def reset(self, starting_units: int = 0) -> None:
+        self._state = {}
+        for i, p in enumerate(self.pools):
+            live = p.starting_units if p.starting_units is not None else (
+                starting_units if i == 0 else 0)
+            self._state[p.name] = _PoolState(p, live)
+        self.revocations = []
+
+    # -- totals ---------------------------------------------------------------------
+    @property
+    def total_live(self) -> int:
+        return sum(s.live for s in self._state.values())
+
+    @property
+    def total_pending(self) -> int:
+        return sum(s.n_pending for s in self._state.values())
+
+    @property
+    def n_revoked(self) -> int:
+        return sum(s.revoked for s in self._state.values())
+
+    def live_of(self, name: str) -> int:
+        return self._state[name].live
+
+    def pending_of(self, name: str) -> int:
+        return self._state[name].n_pending
+
+    def __iter__(self) -> Iterator[UnitPool]:
+        return iter(self.pools)
+
+    # -- per-step protocol ----------------------------------------------------------
+    def land(self, now: float, step_s: float = 1.0) -> int:
+        """Start one step: land provisioned units whose delay elapsed (clamped
+        to the pool ceiling, excess discarded -- same semantics the scalar
+        controller had), apply revocations for preemptible pools, then meter
+        this step's unit-seconds.  Returns total usable units."""
+        for st in self._state.values():
+            if st.pending:
+                ready = sum(c for at, c in st.pending if at <= now)
+                if ready:
+                    st.live = min(st.live + ready, st.pool.max_units)
+                    st.pending = [p for p in st.pending if p[0] > now]
+            if st.pool.revoke_rate > 0.0 and st.live > 0:
+                p_rev = -math.expm1(-st.pool.revoke_rate * step_s)
+                k = int(st.rng.binomial(st.live, p_rev))
+                if k:
+                    st.live -= k
+                    st.revoked += k
+                    self.revocations.append(
+                        RevocationEvent(time=now, pool=st.pool.name, count=k))
+            st.unit_seconds += st.live * step_s
+        return self.total_live
+
+    # -- actuation ------------------------------------------------------------------
+    def request(self, name: str, count: int, now: float) -> int:
+        """Queue ``count`` units of ``name`` behind its provisioning delay.
+        (Clamping to the pool ceiling happens at landing, as before.)"""
+        if count <= 0:
+            return 0
+        st = self._state.get(name)
+        if st is None:
+            raise ValueError(f"unknown pool {name!r}; plan pools: "
+                             f"{[p.name for p in self.pools]}")
+        st.pending.append((now + st.pool.provision_delay_s, int(count)))
+        return int(count)
+
+    def releasable(self) -> int:
+        """Units a voluntary release could currently reclaim: all pending plus
+        live capacity above each pool's floor."""
+        return sum(s.n_pending + max(s.live - s.pool.min_units, 0)
+                   for s in self._state.values())
+
+    def release(self, count: int) -> dict[str, int]:
+        """Voluntarily release up to ``count`` units, most expensive capacity
+        first: pass 1 cancels pending allocations (newest-first within each
+        pool), pass 2 releases live units above each pool's floor.  Returns
+        the per-pool released counts (sum <= count)."""
+        out: dict[str, int] = {}
+        left = int(count)
+        # most expensive first; among equal prices, later-declared pools go
+        # first so the default pool is the last to shrink
+        order = sorted(self._state.values(),
+                       key=lambda s: (s.pool.cost_rate,
+                                      self.pools.index(s.pool)),
+                       reverse=True)
+        for st in order:                       # pass 1: cancel pending
+            while left > 0 and st.pending:
+                at, c = st.pending[-1]
+                take = min(c, left)
+                left -= take
+                out[st.pool.name] = out.get(st.pool.name, 0) + take
+                if take == c:
+                    st.pending.pop()
+                else:
+                    st.pending[-1] = (at, c - take)
+        for st in order:                       # pass 2: release live
+            take = min(left, max(st.live - st.pool.min_units, 0))
+            if take > 0:
+                st.live -= take
+                left -= take
+                out[st.pool.name] = out.get(st.pool.name, 0) + take
+        return out
+
+    # -- observation / accounting ---------------------------------------------------
+    def stats(self) -> dict[str, PoolStats]:
+        return {
+            name: PoolStats(units=st.live, pending=st.n_pending,
+                            cost_rate=st.pool.cost_rate,
+                            min_units=st.pool.min_units,
+                            max_units=st.pool.max_units,
+                            preemptible=st.pool.preemptible,
+                            revoked=st.revoked)
+            for name, st in self._state.items()
+        }
+
+    def unit_seconds_by_pool(self) -> dict[str, float]:
+        return {name: st.unit_seconds for name, st in self._state.items()}
+
+    def cost(self) -> float:
+        """Priced capacity consumed so far (sum of unit-hours x pool rate)."""
+        return sum(st.unit_seconds / 3600.0 * st.pool.cost_rate
+                   for st in self._state.values())
+
+    def report_kwargs(self) -> dict:
+        """RunReport constructor kwargs carrying the plan's priced accounting."""
+        return {
+            "pool_unit_seconds": self.unit_seconds_by_pool(),
+            "pool_cost_rates": {p.name: p.cost_rate for p in self.pools},
+            "n_revocations": self.n_revoked,
+        }
+
+
+__all__ = ["DEFAULT_POOL", "CapacityPlan", "PoolStats", "RevocationEvent",
+           "Sla", "UnitPool"]

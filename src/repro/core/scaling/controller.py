@@ -9,6 +9,16 @@ simulation backends (`repro.core.simulator.Engine`,
 (`repro.launch.serve`) drive their step loop through this object; policies
 never see anything but an :class:`Observation`.
 
+Capacity is a typed :class:`~repro.core.scaling.capacity.CapacityPlan`: an
+ordered set of :class:`UnitPool`\\ s, each with its own provisioning delay,
+price, floor/ceiling, and (for preemptible pools) a seeded revocation
+process.  A config without explicit ``pools`` gets a single on-demand pool
+synthesized from the legacy scalar knobs -- mechanically identical to the
+pre-redesign controller, which the golden parity tests pin bit-for-bit.
+Table III mechanics apply per pool; voluntary downscale releases the most
+expensive capacity first and cancels still-pending allocations (newest-first)
+before touching live units.
+
 Per-step protocol (one call each, in order):
 
     units = ctrl.on_step_start(now)        # provisioned units arriving <= now
@@ -18,11 +28,12 @@ Per-step protocol (one call each, in order):
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import TYPE_CHECKING
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING, Mapping
 
 import numpy as np
 
+from repro.core.scaling.capacity import DEFAULT_POOL, CapacityPlan, UnitPool
 from repro.core.scaling.signals import DEFAULT_CHANNEL, SignalBus
 
 if TYPE_CHECKING:  # runtime import is deferred: autoscaler imports this package
@@ -32,7 +43,13 @@ if TYPE_CHECKING:  # runtime import is deferred: autoscaler imports this package
 @dataclass(frozen=True)
 class ControllerConfig:
     """Table III knobs, backend-agnostic (a 'unit' is a CPU, a replica, or a
-    decode slot -- whatever the backend scales)."""
+    decode slot -- whatever the backend scales).
+
+    ``pools`` types out the capacity: an ordered tuple of :class:`UnitPool`.
+    When None, a single on-demand pool is synthesized from the scalar
+    ``provision_delay_s`` / ``min_units`` / ``max_units`` knobs (the legacy
+    configuration every existing backend uses).
+    """
 
     adapt_period_s: float = 60.0
     provision_delay_s: float = 60.0
@@ -43,14 +60,36 @@ class ControllerConfig:
     app_window_s: float = 120.0      # window for the application-signal tier
     signal_channel: str = DEFAULT_CHANNEL   # channel mirrored into the legacy
                                             # Observation.app_* fields
+    pools: tuple[UnitPool, ...] | None = None
+
+    def __post_init__(self):
+        if self.step_s <= 0.0:
+            raise ValueError(f"step_s must be positive, got {self.step_s}")
+        for name in ("adapt_period_s", "app_window_s"):
+            value = getattr(self, name)
+            n = value / self.step_s
+            if n < 1.0 or abs(n - round(n)) > 1e-9:
+                raise ValueError(
+                    f"{name}={value} must be a positive integer multiple of "
+                    f"step_s={self.step_s} (got {n} steps); fractional periods "
+                    f"would silently truncate the adaptation cadence")
 
     @property
     def period_steps(self) -> int:
-        return int(self.adapt_period_s / self.step_s)
+        return int(round(self.adapt_period_s / self.step_s))
 
     @property
     def window_bins(self) -> int:
-        return int(self.app_window_s / self.step_s)
+        return int(round(self.app_window_s / self.step_s))
+
+    def make_plan(self, starting_units: int) -> CapacityPlan:
+        pools = self.pools
+        if pools is None:
+            pools = (UnitPool(DEFAULT_POOL,
+                              provision_delay_s=self.provision_delay_s,
+                              min_units=self.min_units,
+                              max_units=self.max_units),)
+        return CapacityPlan(pools, starting_units=starting_units)
 
 
 @dataclass(frozen=True)
@@ -58,11 +97,13 @@ class DecisionRecord:
     """One adaptation tick: what the policy asked for and what was actuated."""
 
     time: float
-    requested: int        # raw policy delta
-    applied: int          # queued (if > 0) or released now (if < 0)
+    requested: int        # raw policy delta (net, over all pools)
+    applied: int          # queued (if > 0) or released/cancelled now (if < 0)
     reason: str
     units: int            # usable units right after the tick
     pending: int          # units still inside the provisioning delay
+    pool_deltas: Mapping[str, int] = field(default_factory=dict)
+    # per-pool applied breakdown (queued > 0, released/cancelled < 0)
 
 
 class ScalingController:
@@ -86,8 +127,7 @@ class ScalingController:
     def reset(self, starting_units: int | None = None) -> None:
         if starting_units is not None:
             self._start_units = starting_units
-        self.units: int = self._start_units
-        self.pending: list[tuple[float, int]] = []   # (available_at, count)
+        self.plan: CapacityPlan = self.cfg.make_plan(self._start_units)
         self.decision_log: list[DecisionRecord] = []
         self.n_up = 0
         self.n_down = 0
@@ -97,18 +137,19 @@ class ScalingController:
         self.policy.reset()
 
     @property
+    def units(self) -> int:
+        return self.plan.total_live
+
+    @property
     def n_pending(self) -> int:
-        return sum(c for _, c in self.pending)
+        return self.plan.total_pending
 
     # -- per-step protocol ----------------------------------------------------------
     def on_step_start(self, now: float) -> int:
-        """Land provisioned units whose delay has elapsed; return usable units."""
-        if self.pending:
-            ready = sum(c for at, c in self.pending if at <= now)
-            if ready:
-                self.units = min(self.units + ready, self.cfg.max_units)
-                self.pending = [p for p in self.pending if p[0] > now]
-        return self.units
+        """Land provisioned units whose delay has elapsed, apply revocations
+        for preemptible pools, meter per-pool unit-seconds; return usable
+        units."""
+        return self.plan.land(now, self.cfg.step_s)
 
     def note_step(self, busy_fraction: float, new_arrivals: int) -> None:
         """Accumulate the infrastructure/system window for the next Observation."""
@@ -135,27 +176,48 @@ class ScalingController:
             app_prev_window_mean=primary.prev_mean if primary else 0.0,
             app_window_count=primary.count if primary else 0,
             signals=signals,
+            pools=self.plan.stats(),
         )
 
     def maybe_adapt(self, *, time: float, n_in_system: int) -> DecisionRecord | None:
-        """On-cadence: observe -> decide -> actuate under Table III mechanics."""
+        """On-cadence: observe -> decide -> actuate under Table III mechanics.
+
+        Upscale queues into each targeted pool behind its provisioning delay.
+        Downscale is capped at ``downscale_cap`` units per tick (net, over all
+        pools) and released by the plan: most expensive capacity first,
+        cancelling still-pending allocations before live units -- releasing a
+        live unit while a pending one lands a step later would actuate the
+        opposite of what the policy asked for.
+        """
         if not self.should_adapt():
             return None
         obs = self.observe(time=time, n_in_system=n_in_system)
         d: Decision = self.policy.decide(obs)
-        applied = 0
-        if d.delta > 0:
-            self.n_up += 1
-            applied = int(d.delta)
-            self.pending.append((time + self.cfg.provision_delay_s, applied))
-        elif d.delta < 0 and self.units > self.cfg.min_units:
+        deltas = d.pool_deltas(self.plan.default_pool)
+        applied_pools: dict[str, int] = {}
+        # release BEFORE queueing this tick's upscales: a mixed per-pool
+        # decision (e.g. {"spot": +3, "od": -1}) must never have its release
+        # pass cancel the allocation it queued a moment earlier (a scalar
+        # decision is never both signs, so ordering cannot affect the legacy
+        # single-pool behavior)
+        down_req = -sum(dd for dd in deltas.values() if dd < 0)
+        if down_req > 0 and self.plan.releasable() > 0:
             self.n_down += 1
-            applied = -min(self.cfg.downscale_cap, -int(d.delta),
-                           self.units - self.cfg.min_units)
-            self.units += applied
-        rec = DecisionRecord(time=time, requested=int(d.delta), applied=applied,
+            want = min(self.cfg.downscale_cap, down_req)
+            for name, c in self.plan.release(want).items():
+                applied_pools[name] = applied_pools.get(name, 0) - c
+        for name, dd in deltas.items():
+            if dd > 0:
+                queued = self.plan.request(name, dd, time)
+                if queued:
+                    applied_pools[name] = applied_pools.get(name, 0) + queued
+        if any(dd > 0 for dd in applied_pools.values()):
+            self.n_up += 1
+        rec = DecisionRecord(time=time, requested=int(d.total),
+                             applied=sum(applied_pools.values()),
                              reason=d.reason, units=self.units,
-                             pending=self.n_pending)
+                             pending=self.n_pending,
+                             pool_deltas=applied_pools)
         self.decision_log.append(rec)
         self._win_busy = []
         self._win_arrivals = 0

@@ -29,9 +29,11 @@ from repro.core.scaling import (
     ScalingController,
     ServiceProcess,
     SignalBus,
+    Sla,
+    UnitPool,
 )
 from repro.core.scaling.service import water_level as _water_level  # noqa: F401
-from repro.core.simulator.workload import Trace
+from repro.core.simulator.workload import CLASSES, Trace
 
 
 @dataclass(frozen=True)
@@ -51,6 +53,9 @@ class SimConfig:
                                            # the application, so policies cannot see it)
     app_window_s: float = 120.0           # appdata window (§V-B: 120 s beats 60 s)
     drain: bool = True                    # keep simulating until all tweets finish
+    pools: tuple[UnitPool, ...] | None = None   # typed capacity (None: one
+                                                # on-demand pool from the knobs above)
+    sla: Sla | None = None                # per-class deadlines (None: flat sla_s)
 
 
 @dataclass
@@ -117,8 +122,9 @@ class Engine:
         duration_steps = int(tr.duration / step)
 
         # in-flight set: the shared water-filling core, carrying (post time,
-        # sentiment) payload columns through the sorted arrays
-        proc = ServiceProcess({"post": np.float64, "sent": np.float32})
+        # sentiment, tweet class) payload columns through the sorted arrays
+        proc = ServiceProcess({"post": np.float64, "sent": np.float32,
+                               "cls": np.int8})
 
         # input queue (only used when max_input_rate caps admission)
         q_head = 0          # first not-yet-admitted tweet index (arrival order)
@@ -126,6 +132,7 @@ class Engine:
 
         # completed-tweet accounting
         delays = np.zeros(n_total, dtype=np.float64)
+        done_cls = np.zeros(n_total, dtype=np.int8)   # class of the i-th completion
         n_done = 0
         # app-signal channel: per-second bins of completed tweets, by POST time
         # (§V-B: "it is not the time the tweet is done being processed that is used
@@ -141,6 +148,7 @@ class Engine:
                 step_s=step,
                 app_window_s=cfg.app_window_s,
                 signal_channel="sentiment",
+                pools=cfg.pools,
             ),
             bus,
             starting_units=cfg.starting_units,
@@ -178,10 +186,12 @@ class Engine:
                 # zero-demand tweets (PE1 discards) complete instantly
                 instant = proc.admit(tr.cycles[adm_lo:adm_hi],
                                      post=tr.post_time[adm_lo:adm_hi],
-                                     sent=tr.sentiment[adm_lo:adm_hi])
+                                     sent=tr.sentiment[adm_lo:adm_hi],
+                                     cls=tr.class_id[adm_lo:adm_hi])
                 if instant is not None:
                     k0 = instant["post"].size
                     delays[n_done : n_done + k0] = (now + step) - instant["post"]
+                    done_cls[n_done : n_done + k0] = instant["cls"]
                     n_done += k0
                     bus.record("sentiment", instant["post"], instant["sent"])
 
@@ -194,6 +204,7 @@ class Engine:
             if sr.n_finished > 0:
                 fin_post = sr.finished["post"]
                 delays[n_done : n_done + sr.n_finished] = (now + step) - fin_post
+                done_cls[n_done : n_done + sr.n_finished] = sr.finished["cls"]
                 n_done += sr.n_finished
                 bus.record("sentiment", fin_post, sr.finished["sent"])
             util = sr.busy
@@ -215,6 +226,7 @@ class Engine:
                 )
 
         units_arr = np.asarray(units_hist, dtype=np.int64)
+        class_names = np.array([c.name for c in CLASSES])
         return SimResult(
             backend="simulator",
             workload=tr.match.name,
@@ -227,8 +239,11 @@ class Engine:
             n_decisions_down=ctrl.n_down,
             unit_name="cpu",
             decisions=ctrl.decision_log,
+            sla=cfg.sla,
+            classes=class_names[done_cls[:n_done]],
             util_t=np.asarray(util_hist, dtype=np.float32),
             in_system_t=np.asarray(insys_hist, dtype=np.int64),
+            **ctrl.plan.report_kwargs(),
         )
 
 

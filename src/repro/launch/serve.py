@@ -43,15 +43,23 @@ class DrainTimeout(RuntimeError):
 
 
 class ServeBackend:
-    """ScalableBackend over a live ServingEngine (unit = decode slot)."""
+    """ScalableBackend over a live ServingEngine (unit = decode slot).
+
+    ``pools`` types the slot capacity (e.g. an on-demand pool plus a cheap
+    preemptible one whose slots model borrowed capacity that can be revoked);
+    ``sla`` adds per-request-class deadlines.  Both default to the legacy
+    single-pool / flat-SLA configuration.
+    """
 
     def __init__(self, eng, requests, *, sla_s: float, horizon_s: float,
                  policy=None, adapt_period_s: float = 5.0,
                  provision_delay_s: float = 3.0, app_window_s: float = 10.0,
-                 starting_slots: int = 1, stall_steps: float = 50.0):
+                 starting_slots: int = 1, stall_steps: float = 50.0,
+                 pools=None, sla=None):
         self.eng = eng
         self.requests = sorted(requests, key=lambda r: r.arrival_s)
         self.sla_s = sla_s
+        self.sla = sla
         self.horizon_s = horizon_s
         self.stall_steps = stall_steps
         self.evictions = 0
@@ -67,6 +75,7 @@ class ServeBackend:
                 step_s=1.0,
                 app_window_s=app_window_s,
                 signal_channel="output_score",
+                pools=pools,
             ),
             SignalBus(("output_score",), bin_s=1.0),
             starting_units=starting_slots,
@@ -123,6 +132,8 @@ class ServeBackend:
 
         units_arr = np.asarray(units_hist, dtype=np.int64)
         lat = np.array([r.done_s - r.arrival_s for r in eng.completed])
+        classes = np.array(
+            [f"p{r.request_class[0]}d{r.request_class[1]}" for r in eng.completed])
         return RunReport(
             backend="serve",
             workload=f"{len(self.requests)} requests",
@@ -135,7 +146,10 @@ class ServeBackend:
             n_decisions_down=ctrl.n_down,
             unit_name="slot",
             decisions=ctrl.decision_log,
+            sla=self.sla,
+            classes=classes,
             extra={"evictions": self.evictions, "engine_steps": eng.step_count},
+            **ctrl.plan.report_kwargs(),
         )
 
 

@@ -1,0 +1,406 @@
+"""Capacity-plane tests: typed unit pools, the CapacityPlan actuation
+mechanics (per-pool delays, ceilings, expensive-first release with
+pending-cancel, seeded spot revocation), per-pool Decisions, priced
+RunReports and per-class SLAs, and the single-pool <-> legacy-scalar
+equivalence that underwrites the golden parity tests."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.autoscaler import (
+    CheapestFirstRouter,
+    Decision,
+    Observation,
+    Policy,
+    ThresholdPolicy,
+)
+from repro.core.scaling import (
+    CapacityPlan,
+    ControllerConfig,
+    PoolStats,
+    RunReport,
+    ScalingController,
+    Sla,
+    UnitPool,
+)
+
+
+# ---------------------------------------------------------------------------------
+# UnitPool / Sla specs
+# ---------------------------------------------------------------------------------
+
+def test_unit_pool_validation():
+    with pytest.raises(ValueError, match="name"):
+        UnitPool("")
+    with pytest.raises(ValueError, match="provision_delay_s"):
+        UnitPool("p", provision_delay_s=-1.0)
+    with pytest.raises(ValueError, match="cost_rate"):
+        UnitPool("p", cost_rate=-0.5)
+    with pytest.raises(ValueError, match="min_units"):
+        UnitPool("p", min_units=5, max_units=2)
+    with pytest.raises(ValueError, match="preemptible"):
+        UnitPool("p", revoke_rate=0.1)          # hazard without the marker
+
+
+def test_sla_spec():
+    sla = Sla(300.0, {"full": 120.0})
+    assert sla.deadline_s("full") == 120.0
+    assert sla.deadline_s("anything-else") == 300.0
+    d = sla.deadlines(np.array(["full", "x", "full"]))
+    assert list(d) == [120.0, 300.0, 120.0]
+    with pytest.raises(ValueError, match="positive"):
+        Sla(0.0)
+    with pytest.raises(ValueError, match="positive"):
+        Sla(10.0, {"c": -1.0})
+
+
+def test_capacity_plan_rejects_bad_pool_sets():
+    with pytest.raises(ValueError, match="at least one"):
+        CapacityPlan(())
+    with pytest.raises(ValueError, match="duplicate"):
+        CapacityPlan((UnitPool("a"), UnitPool("a")))
+
+
+# ---------------------------------------------------------------------------------
+# CapacityPlan mechanics
+# ---------------------------------------------------------------------------------
+
+def _two_pool_plan(**spot_kw):
+    return CapacityPlan((
+        UnitPool("od", provision_delay_s=30.0, cost_rate=3.0, min_units=1),
+        UnitPool("spot", provision_delay_s=10.0, cost_rate=1.0, max_units=4,
+                 **spot_kw),
+    ), starting_units=2)
+
+
+def test_plan_per_pool_delays_and_metering():
+    plan = _two_pool_plan()
+    assert plan.total_live == 2 and plan.default_pool == "od"
+    plan.request("od", 1, now=0.0)       # lands at 30
+    plan.request("spot", 2, now=0.0)     # lands at 10
+    assert plan.total_pending == 3
+    assert plan.land(9.0) == 2
+    assert plan.land(10.0) == 4          # spot pair landed first
+    assert plan.live_of("spot") == 2 and plan.pending_of("od") == 1
+    assert plan.land(30.0) == 5
+    # unit-second meters: od held 2 for steps at t=9,10 then 3 at t=30;
+    # spot held 0, 2, 2
+    us = plan.unit_seconds_by_pool()
+    assert us["od"] == pytest.approx(2 + 2 + 3)
+    assert us["spot"] == pytest.approx(0 + 2 + 2)
+    assert plan.cost() == pytest.approx((7 * 3.0 + 4 * 1.0) / 3600.0)
+
+
+def test_plan_landing_clamps_to_pool_ceiling():
+    plan = _two_pool_plan()
+    plan.request("spot", 10, now=0.0)
+    assert plan.land(10.0) == 2 + 4      # excess over max_units=4 discarded
+    assert plan.pending_of("spot") == 0
+
+
+def test_plan_release_cancels_pending_newest_first_then_expensive_live():
+    plan = _two_pool_plan()
+    plan.land(0.0)
+    plan.request("spot", 1, now=0.0)
+    plan.request("spot", 2, now=1.0)     # newest spot pending
+    # pass 1 hits pending regardless of which pool has live capacity
+    assert plan.release(1) == {"spot": 1}
+    assert plan._state["spot"].pending == [(10.0, 1), (11.0, 1)]  # newest shrank
+    # drain remaining pending, then live: od (3.0/h) before spot (1.0/h)
+    plan.land(11.0)                      # 2 spot land; od live 2, spot live 2
+    assert plan.release(2) == {"od": 1, "spot": 1}
+    # od stops at its floor (min_units=1): only spot keeps releasing
+    assert plan.release(5) == {"spot": 1}
+    assert plan.releasable() == 0
+    assert plan.release(1) == {}
+
+
+def test_plan_revocation_is_seeded_and_involuntary():
+    mk = lambda: CapacityPlan((
+        UnitPool("spot", cost_rate=1.0, min_units=2, max_units=8,
+                 preemptible=True, revoke_rate=0.05, revoke_seed=3),),
+        starting_units=8)
+    a, b = mk(), mk()
+    traj_a = [a.land(float(t)) for t in range(200)]
+    traj_b = [b.land(float(t)) for t in range(200)]
+    assert traj_a == traj_b              # same seed -> same revocation draws
+    assert a.n_revoked > 0
+    assert sum(e.count for e in a.revocations) == a.n_revoked
+    # revocation is involuntary: it takes the pool below its voluntary floor
+    assert min(traj_a) < 2
+    assert a.report_kwargs()["n_revocations"] == a.n_revoked
+
+
+# ---------------------------------------------------------------------------------
+# Decision algebra
+# ---------------------------------------------------------------------------------
+
+def test_decision_pool_algebra():
+    assert Decision(3).pool_deltas("d") == {"d": 3}
+    assert Decision(0).pool_deltas("d") == {}
+    assert Decision(0, pools={"spot": 2, "od": -1}).total == 1
+    assert Decision(0, pools={"spot": 2, None: 1}).pool_deltas("od") == \
+        {"spot": 2, "od": 1}
+    # scalar + pool-targeted votes merge; the scalar keeps tracking the
+    # default pool through the merge
+    d = Decision(2, "a") + Decision(0, "b", pools={"spot": 3})
+    assert d.pool_deltas("od") == {"od": 2, "spot": 3}
+    assert d.total == 5 and d.reason == "a;b"
+    # merging two scalars stays scalar
+    d2 = Decision(2) + Decision(-1)
+    assert d2.pools is None and d2.delta == 1
+    # opposite votes cancelling collapses back to a scalar zero
+    d3 = Decision(0, pools={"spot": 1}) + Decision(0, pools={"spot": -1})
+    assert d3.pools is None and d3.total == 0
+
+
+def _obs(**kw):
+    base = dict(time=0.0, n_units=2, n_pending=0, utilization=0.5,
+                n_in_system=0, input_rate=0.0)
+    base.update(kw)
+    return Observation(**base)
+
+
+def test_cheapest_first_router():
+    pools = {
+        "od": PoolStats(units=2, pending=0, cost_rate=3.0, max_units=4),
+        "spot": PoolStats(units=1, pending=1, cost_rate=1.0, max_units=4),
+    }
+    pol = CheapestFirstRouter(ThresholdPolicy(0.9))
+    # upscale routed to the cheapest headroom first, spilling upward
+    d = pol.decide(_obs(utilization=1.0, pools=pools))
+    assert d.pool_deltas("od") == {"spot": 1}
+    big = CheapestFirstRouter(_Script([4]))
+    d = big.decide(_obs(pools=pools))
+    assert d.pool_deltas("od") == {"spot": 2, "od": 2}
+    # downscale passes through untouched (controller releases expensive first)
+    down = CheapestFirstRouter(ThresholdPolicy(0.9, lower=0.6))
+    d = down.decide(_obs(utilization=0.1, pools=pools))
+    assert d.pools is None and d.delta == -1
+    # without a typed plan the router is the identity
+    d = CheapestFirstRouter(_Script([4])).decide(_obs())
+    assert d.pools is None and d.delta == 4
+    assert big.describe() == "cheapest(script)"
+
+
+# ---------------------------------------------------------------------------------
+# Controller actuation over pools
+# ---------------------------------------------------------------------------------
+
+class _Script(Policy):
+    name = "script"
+
+    def __init__(self, deltas):
+        self.deltas = list(deltas)
+        self.i = 0
+
+    def reset(self):
+        self.i = 0
+
+    def decide(self, obs):
+        d = self.deltas[self.i] if self.i < len(self.deltas) else 0
+        self.i += 1
+        if isinstance(d, dict):
+            return Decision(0, "scripted", pools=d)
+        return Decision(d, "scripted")
+
+
+def _drive(ctrl, n_steps, *, step_s=1.0):
+    units = []
+    for k in range(n_steps):
+        units.append(ctrl.on_step_start(k * step_s))
+        ctrl.note_step(0.5, 0)
+        ctrl.maybe_adapt(time=(k + 1) * step_s, n_in_system=0)
+    return units
+
+
+def test_single_pool_config_equals_legacy_scalar_config():
+    """An explicit one-on-demand-pool plan is mechanically identical to the
+    scalar knobs -- the invariant behind the golden parity pins."""
+    script = [5, 0, -3, -3, 2, -1, -1, -1, 0, -2]
+    legacy = ScalingController(
+        _Script(script),
+        ControllerConfig(adapt_period_s=10.0, provision_delay_s=30.0,
+                         max_units=6),
+        starting_units=2)
+    pooled = ScalingController(
+        _Script(script),
+        ControllerConfig(adapt_period_s=10.0, provision_delay_s=999.0,
+                         max_units=1,    # scalar knobs ignored when pools given
+                         pools=(UnitPool("on-demand", provision_delay_s=30.0,
+                                         min_units=1, max_units=6),)),
+        starting_units=2)
+    assert _drive(legacy, 120) == _drive(pooled, 120)
+    assert [r.applied for r in legacy.decision_log] == \
+        [r.applied for r in pooled.decision_log]
+
+
+def test_controller_downscale_cancels_pending_first():
+    """Regression (pending-cancel fix): a downscale tick with units still in
+    the provisioning queue cancels the newest pending allocation instead of
+    releasing a live unit that the pending one would immediately replace."""
+    cfg = ControllerConfig(adapt_period_s=10.0, provision_delay_s=100.0)
+    ctrl = ScalingController(_Script([3, -1]), cfg, starting_units=4)
+    units = _drive(ctrl, 40)
+    # t=10: +3 queued (lands t=110).  t=20: -1 must cancel one pending unit...
+    assert ctrl.decision_log[1].applied == -1
+    assert ctrl.n_pending == 2
+    # ...and leave the live fleet alone (the pre-fix controller dropped to 3
+    # live here and then landed all 3 pending anyway, ending at 6 not 5)
+    assert ctrl.units == 4
+    assert all(u == 4 for u in units)
+
+
+def test_controller_downscale_acts_at_floor_when_pending_exists():
+    """The pre-fix controller refused any downscale while live units sat at
+    the floor, even with a provisioning queue about to land more."""
+    cfg = ControllerConfig(adapt_period_s=10.0, provision_delay_s=100.0,
+                           min_units=1)
+    ctrl = ScalingController(_Script([5, -2]), cfg, starting_units=1)
+    _drive(ctrl, 30)
+    rec = ctrl.decision_log[1]
+    assert rec.applied == -1             # downscale_cap still applies
+    assert ctrl.n_pending == 4 and ctrl.units == 1
+
+
+def test_controller_two_pools_scalar_maps_to_default():
+    pools = (UnitPool("od", provision_delay_s=10.0, cost_rate=3.0, min_units=1),
+             UnitPool("spot", provision_delay_s=10.0, cost_rate=1.0,
+                      max_units=8))
+    ctrl = ScalingController(
+        _Script([2, {"spot": 3}, 0, -1, -1]),
+        ControllerConfig(adapt_period_s=10.0, pools=pools), starting_units=1)
+    _drive(ctrl, 70)
+    log = ctrl.decision_log
+    assert log[0].pool_deltas == {"od": 2}       # scalar -> default pool
+    assert log[1].pool_deltas == {"spot": 3}     # targeted delta
+    # downscale releases the most expensive capacity first: od down to its
+    # floor, then spot
+    assert log[3].pool_deltas == {"od": -1}
+    assert log[4].pool_deltas == {"od": -1}
+    assert ctrl.plan.live_of("od") == 1 and ctrl.plan.live_of("spot") == 3
+
+
+def test_controller_mixed_sign_decision_never_cancels_its_own_upscale():
+    """{"spot": +3, "od": -1} in one tick: the release pass must run before
+    the queue pass, so it cannot cancel the spot allocation queued the same
+    tick (newest-first pending cancel would otherwise eat it)."""
+    pools = (UnitPool("od", provision_delay_s=10.0, cost_rate=3.0),
+             UnitPool("spot", provision_delay_s=10.0, cost_rate=1.0,
+                      max_units=8))
+    ctrl = ScalingController(
+        _Script([{"spot": 3, "od": -1}]),
+        ControllerConfig(adapt_period_s=10.0, pools=pools), starting_units=2)
+    _drive(ctrl, 25)
+    assert ctrl.decision_log[0].pool_deltas == {"od": -1, "spot": 3}
+    assert ctrl.plan.live_of("od") == 1          # the release hit on-demand
+    assert ctrl.plan.live_of("spot") == 3        # all three spot units landed
+
+
+def test_plan_request_unknown_pool_fails_loudly():
+    plan = _two_pool_plan()
+    with pytest.raises(ValueError, match=r"unknown pool 'Spot'.*'od', 'spot'"):
+        plan.request("Spot", 1, now=0.0)
+
+
+def test_controller_config_validation():
+    with pytest.raises(ValueError, match="adapt_period_s"):
+        ControllerConfig(adapt_period_s=90.0, step_s=60.0)   # 1.5 steps
+    with pytest.raises(ValueError, match="app_window_s"):
+        ControllerConfig(app_window_s=50.0, step_s=60.0)     # < one step
+    with pytest.raises(ValueError, match="step_s"):
+        ControllerConfig(step_s=0.0)
+    # exact multiples (incl. fractional steps) stay valid
+    assert ControllerConfig(adapt_period_s=1.5, app_window_s=3.0,
+                            step_s=0.5).period_steps == 3
+
+
+# ---------------------------------------------------------------------------------
+# Priced RunReports + per-class SLAs
+# ---------------------------------------------------------------------------------
+
+def _report(**kw):
+    base = dict(backend="x", workload="w", policy="p", sla_s=10.0,
+                latencies=np.array([1.0, 5.0, 20.0, 30.0]),
+                unit_seconds=7200.0, units_t=np.array([1, 2]))
+    base.update(kw)
+    return RunReport(**base)
+
+
+def test_runreport_cost_defaults_to_unit_hours():
+    rep = _report()
+    assert rep.cost == pytest.approx(2.0)
+    assert rep["cost"] == pytest.approx(2.0)
+
+
+def test_runreport_prices_pools_and_reports_revocations():
+    rep = _report(pool_unit_seconds={"od": 3600.0, "spot": 7200.0},
+                  pool_cost_rates={"od": 3.0, "spot": 1.0},
+                  n_revocations=4)
+    assert rep.cost == pytest.approx(1 * 3.0 + 2 * 1.0)
+    s = rep.summary()
+    assert s["unit_hours.od"] == pytest.approx(1.0)
+    assert s["unit_hours.spot"] == pytest.approx(2.0)
+    assert s["n_revocations"] == 4
+
+
+def test_runreport_per_class_sla_breakdown():
+    rep = _report(latencies=np.array([1.0, 5.0, 20.0, 30.0]),
+                  classes=np.array(["batch", "inter", "inter", "batch"]),
+                  sla=Sla(25.0, {"inter": 4.0}))
+    # per-item deadlines: batch 25, inter 4 -> violations: 5>4, 20>4, 30>25
+    assert rep.violation_rate == pytest.approx(3 / 4)
+    by = rep.violation_rate_by_class()
+    assert by == {"batch": pytest.approx(0.5), "inter": pytest.approx(1.0)}
+    assert rep.worst_class == ("inter", pytest.approx(1.0))
+    s = rep.summary()
+    assert s["viol_pct.inter"] == pytest.approx(100.0)
+    assert s["worst_class"] == "inter"
+    # classes without an Sla spec fall back to the flat sla_s per class
+    flat = _report(classes=np.array(["a", "a", "b", "b"]))
+    assert flat.violation_rate_by_class() == \
+        {"a": pytest.approx(0.0), "b": pytest.approx(1.0)}
+    # no classes -> no breakdown keys, flat rate unchanged
+    plain = _report()
+    assert plain.violation_rate == pytest.approx(0.5)
+    assert plain.worst_class is None
+    assert "worst_class" not in plain.summary()
+
+
+# ---------------------------------------------------------------------------------
+# End-to-end: spot pools through a real backend
+# ---------------------------------------------------------------------------------
+
+def test_elastic_spot_pool_revocation_end_to_end():
+    from repro.core.elastic import ClusterConfig, ElasticCluster, ServeRequest
+    rng = np.random.default_rng(0)
+    reqs = [ServeRequest(
+        rid=i, arrival_s=float(rng.uniform(0, 600)),
+        prefill_len=int(rng.exponential(3000)) + 256,
+        decode_len=int(rng.exponential(100)) + 16,
+        request_class="interactive" if i % 3 == 0 else "batch")
+        for i in range(3000)]
+    cfg = ClusterConfig(
+        pools=(UnitPool("od", provision_delay_s=45.0, cost_rate=3.0,
+                        min_units=1),
+               UnitPool("spot", provision_delay_s=45.0, cost_rate=1.0,
+                        max_units=12, preemptible=True,
+                        revoke_rate=1.0 / 120.0, revoke_seed=5)),
+        sla=Sla(30.0, {"interactive": 15.0}))
+    pol = CheapestFirstRouter(ThresholdPolicy(0.7))
+    res = ElasticCluster(cfg, pol, reqs).run()
+    assert res.n_done == len(reqs)
+    assert res.n_revocations > 0                   # spot churned mid-run
+    # per-pool meters add up to the fleet total, and the blended rate sits
+    # strictly between the two pool prices
+    us = res.pool_unit_seconds
+    assert sum(us.values()) == pytest.approx(res.unit_seconds)
+    assert us["spot"] > 0
+    assert 1.0 < res.cost / res.unit_hours < 3.0
+    by = res.violation_rate_by_class()
+    assert set(by) == {"interactive", "batch"}
+    # the tighter deadline makes interactive the harder class to serve
+    assert by["interactive"] >= by["batch"]
+    # decisions recorded per pool: the cheap pool was bought into
+    assert any(d.pool_deltas.get("spot", 0) > 0 for d in res.decisions)

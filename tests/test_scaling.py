@@ -83,7 +83,16 @@ def test_elastic_backend_golden_regression():
     after the Algorithm-1 unification onto the shared water-filling service
     core, see DESIGN.md: the old equal-share loop dropped a finished request's
     excess capacity, so the water-filling fleet completes the same stream with
-    lower latency and fewer replica-hours)."""
+    lower latency and fewer replica-hours).
+
+    replica_hours regenerated once more (0.10111 -> 0.105) for the
+    pending-cancel downscale fix: one downscale tick (t=164) now cancels the
+    still-provisioning replica queued at t=134 instead of releasing a live one
+    while that pending replica lands 15 s later anyway -- the fleet holds 3
+    live replicas through [164, 179) instead of dipping to 2 and bouncing
+    back.  Everything else (latencies, decision counts, peaks) is unchanged;
+    the simulator goldens, where the adaptation period equals the
+    provisioning delay (Table III), are bit-for-bit unaffected."""
     from repro.core.elastic import ClusterConfig, ElasticCluster, ServeRequest
     rng = np.random.default_rng(0)
     reqs = []
@@ -101,7 +110,7 @@ def test_elastic_backend_golden_regression():
     assert res["n_done"] == 406
     assert res["violation_rate"] == 0.0
     assert res["mean_latency_s"] == pytest.approx(1.6547317567942001)
-    assert res["replica_hours"] == pytest.approx(0.10111111111111111)
+    assert res["replica_hours"] == pytest.approx(0.105)
     assert res["max_replicas"] == 3
     assert (res["n_scale_ups"], res["n_scale_downs"]) == (2, 3)
 
@@ -471,5 +480,50 @@ def test_policy_registry():
                        schedule=[(0.0, 60.0, 2)]).describe() == "scheduled(1 windows)"
     with pytest.raises(ValueError, match="schedule"):
         make_policy("scheduled")          # helpful error, not a bare TypeError
-    with pytest.raises(KeyError):
+
+
+def test_policy_registry_error_paths():
+    from repro.core.scaling import register_policy
+    # unknown name: a KeyError that *names* the known policies
+    with pytest.raises(KeyError, match="unknown policy 'nope'"):
         make_policy("nope")
+    # duplicate registration is refused loudly (silent override would let a
+    # plugin shadow the built-ins)
+    with pytest.raises(ValueError, match="already registered"):
+        register_policy("threshold", ThresholdPolicy)
+    # ... and the decorator form refuses identically
+    with pytest.raises(ValueError, match="already registered"):
+        @register_policy("target")
+        class Shadow(Policy):
+            pass
+    # the failed registrations must not have clobbered the originals
+    assert make_policy("threshold", upper=0.8).describe() == "threshold(80%)"
+    assert make_policy("target").name == "target"
+
+
+class _Const(Policy):
+    """Always votes the same delta (CompositePolicy interaction tests)."""
+    name = "const"
+
+    def __init__(self, delta, reason=""):
+        self._d = Decision(delta, reason)
+
+    def decide(self, obs):
+        return self._d
+
+
+def test_composite_up_vote_vetoes_down():
+    obs = _obs()
+    # up + down -> the up vote wins outright, in either arrival order
+    assert CompositePolicy([_Const(+2), _Const(-1)]).decide(obs).total == 2
+    assert CompositePolicy([_Const(-1), _Const(+2)]).decide(obs).total == 2
+    # the veto zeroes the release; it does not net it against the allocation
+    assert CompositePolicy([_Const(-1), _Const(+1)]).decide(obs).total == 1
+    # several up votes accumulate; a lone down vote among them still loses
+    assert CompositePolicy(
+        [_Const(+1), _Const(-1), _Const(+3)]).decide(obs).total == 4
+    # all-down composes to a release (the controller caps it at -1 later)
+    assert CompositePolicy([_Const(-1), _Const(-1)]).decide(obs).total == -2
+    # reasons survive composition
+    d = CompositePolicy([_Const(+1, "burst"), _Const(0, "")]).decide(obs)
+    assert "burst" in d.reason
