@@ -1,7 +1,12 @@
 """Kernel micro-benchmarks: interpret-mode correctness + jnp-path timing on CPU
-(the TPU numbers come from the dry-run roofline, not from wall clock here)."""
+(the TPU numbers come from the dry-run roofline, not from wall clock here),
+plus the paged-decode page-size / block-k autotune sweep whose JSON artifact
+(``benchmarks/artifacts/kernels_paged_sweep.json``) seeds the defaults table
+in ``repro.kernels.decode_attention.autotune``."""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -9,6 +14,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import Rows, banner
+
+SWEEP_ARTIFACT = os.path.join(os.path.dirname(__file__), "artifacts",
+                              "kernels_paged_sweep.json")
 
 
 def run(quick: bool = False) -> Rows:
@@ -41,6 +49,42 @@ def run(quick: bool = False) -> Rows:
     out = decode_attention(q1, kc, vc, S2 // 2, block_k=256)
     ref = decode_attention_ref(q1[:, 0], kc, vc, S2 // 2)[:, None]
     rows.add("decode_attention.max_err", float(jnp.abs(out - ref).max()))
+
+    # paged decode: block-table kernel correctness + the autotune data source
+    from repro.kernels.decode_attention.ops import decode_attention_paged
+    from repro.kernels.decode_attention.ref import paged_decode_attention_ref
+    ps_, npg = 16, 4
+    P = B * npg + 2
+    kp = jax.random.normal(ks[1], (P, ps_, Hkv, D))
+    vp = jax.random.normal(ks[2], (P, ps_, Hkv, D))
+    perm = np.random.default_rng(0).permutation(np.arange(1, P))
+    tbl = jnp.asarray(perm[:B * npg].reshape(B, npg).astype(np.int32))
+    lens = jnp.full((B,), npg * ps_ - 3, jnp.int32)
+    out = decode_attention_paged(q1, kp, vp, tbl, lens)
+    ref = paged_decode_attention_ref(q1[:, 0], kp, vp, tbl, lens)[:, None]
+    rows.add("paged_decode_attention.max_err", float(jnp.abs(out - ref).max()))
+
+    from repro.kernels.decode_attention import autotune
+    reps = 3 if quick else 10
+    page_rows = autotune.sweep_page_size(
+        (8, 16, 32) if quick else (8, 16, 32, 64),
+        total_tokens=128 if quick else 256, reps=reps)
+    block_rows = autotune.sweep_block_k(
+        (128, 256) if quick else (128, 256, 512, 1024),
+        S=256 if quick else 1024, reps=reps)
+    for r in page_rows:
+        rows.add(f"paged_sweep.ps{r['page_size']}.us_per_step", r["us_per_step"])
+    for r in block_rows:
+        rows.add(f"dense_sweep.bk{r['block_k']}.us_per_step", r["us_per_step"])
+    picked = autotune.pick_defaults(page_rows, block_rows)
+    rows.add("autotune.page_size", float(picked["page_size"]))
+    rows.add("autotune.block_k", float(picked["block_k"]))
+    os.makedirs(os.path.dirname(SWEEP_ARTIFACT), exist_ok=True)
+    with open(SWEEP_ARTIFACT, "w") as f:
+        json.dump({"page_size_sweep": page_rows, "block_k_sweep": block_rows,
+                   "picked": picked, "shipped_defaults": autotune.DEFAULTS},
+                  f, indent=2)
+    print(f"[artifact] {SWEEP_ARTIFACT}")
 
     from repro.kernels.ssd.ops import ssd_intra
     from repro.kernels.ssd.ref import ssd_intra_ref

@@ -26,7 +26,9 @@ MODULES = [
 #: fast subset exercising every control-plane path (simulator backend, elastic
 #: backend, multi-channel signals, and the priced spot-revocation capacity
 #: scenario incl. the live serve backend) -- the scripts/check.sh verify gate;
-#: policy_table also emits the benchmarks/artifacts/ JSON that CI uploads
+#: policy_table emits the benchmarks/artifacts/ JSON that CI uploads, and
+#: check.sh additionally runs serving_engine (which writes BENCH_serving.json
+#: and enforces the tokens/s floor vs the pre-device-resident baseline)
 SMOKE_MODULES = ["littles_law", "fig8_appdata", "elastic_serving",
                  "policy_table"]
 

@@ -15,7 +15,8 @@ echo "== smoke: benchmarks =="
 python -m benchmarks.run --smoke
 
 echo
-echo "== smoke: serving engine (bounded wall-clock, trace-count gates) =="
+echo "== smoke: serving engine (trace-count gates + tokens/s floor vs the"
+echo "==        pre-device-resident-loop baseline; writes BENCH_serving.json) =="
 timeout 300 python -m benchmarks.run --smoke --only serving_engine
 
 echo

@@ -104,14 +104,23 @@ def decode_attention_fwd(q, k_cache, v_cache, scalars, *, block_k: int = 1024,
     )(scalars, q, k_cache, v_cache)
 
 
-def _paged_dec_kernel(tbl_ref, len_ref, win_ref, q_ref, k_ref, v_ref, o_ref,
-                      m_scr, l_scr, acc_scr, *, page_size: int, group: int,
-                      sm_scale: float):
+def _paged_dec_kernel(tbl_ref, len_ref, win_ref, q_ref, k_ref, v_ref, *rest,
+                      page_size: int, group: int, sm_scale: float,
+                      int8: bool = False):
     """Block-table flash-decoding: grid (B, n_pages); iteration ``pi`` streams
     the page ``tbl_ref[b, pi]`` holding logical positions
     [pi*ps, (pi+1)*ps) of row b.  The block table is a scalar-prefetch
     operand, so the page DMA address is computed before the body runs --
-    the same compiled kernel serves every decode step and every slot mix."""
+    the same compiled kernel serves every decode step and every slot mix.
+
+    With ``int8=True`` two extra page-pool refs carry the per-token/head f32
+    scales and K/V are dequantized in-register after the page DMA -- the int8
+    pool is what streams through VMEM, so the HBM traffic stays halved."""
+    if int8:
+        ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        ks_ref = vs_ref = None
+        o_ref, m_scr, l_scr, acc_scr = rest
     b = pl.program_id(0)
     pi = pl.program_id(1)
     npg = pl.num_programs(1)
@@ -133,6 +142,9 @@ def _paged_dec_kernel(tbl_ref, len_ref, win_ref, q_ref, k_ref, v_ref, o_ref,
         q = q_ref[0].astype(jnp.float32) * sm_scale           # (Hq, d)
         k = k_ref[0].astype(jnp.float32)                      # (ps, Hkv, d)
         v = v_ref[0].astype(jnp.float32)
+        if int8:
+            k = k * ks_ref[0]                                 # (ps, Hkv, 1)
+            v = v * vs_ref[0]
         kr = jnp.repeat(k, group, axis=1)                     # (ps, Hq, d)
         s = jnp.einsum("hd,thd->ht", q, kr)                   # (Hq, ps)
         k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
@@ -155,10 +167,15 @@ def _paged_dec_kernel(tbl_ref, len_ref, win_ref, q_ref, k_ref, v_ref, o_ref,
 
 
 def paged_decode_attention_fwd(q, k_pages, v_pages, block_table, lengths,
-                               window, *, interpret: bool = False):
+                               window, *, k_scale=None, v_scale=None,
+                               interpret: bool = False):
     """q: (B, Hq, D); pages: (P, page_size, Hkv, D); block_table: (B, n) int32;
     lengths: (B,) int32 valid logical entries per row (incl. the current
     token); window: (1,) int32, -1 = unlimited.
+
+    ``k_scale``/``v_scale``: optional (P, page_size, Hkv, 1) f32 pools for
+    int8 pages -- when given, K/V pages are dequantized inside the kernel
+    (the int8 KV path no longer falls back to the jnp gather route).
 
     Returns (B, Hq, D).  Rows attend only to their own pages; table entries
     past a row's live pages may point anywhere (trash page) -- those grid
@@ -168,19 +185,28 @@ def paged_decode_attention_fwd(q, k_pages, v_pages, block_table, lengths,
     page_size, Hkv = k_pages.shape[1], k_pages.shape[2]
     n_pages = block_table.shape[1]
     group = Hq // Hkv
+    int8 = k_scale is not None
 
     kernel = functools.partial(_paged_dec_kernel, page_size=page_size,
-                               group=group, sm_scale=D ** -0.5)
+                               group=group, sm_scale=D ** -0.5, int8=int8)
+    page_spec = pl.BlockSpec((1, page_size, Hkv, D),
+                             lambda b, pi, tbl, lens, win: (tbl[b, pi], 0, 0, 0))
+    in_specs = [
+        pl.BlockSpec((1, Hq, D), lambda b, pi, tbl, lens, win: (b, 0, 0)),
+        page_spec,
+        page_spec,
+    ]
+    inputs = [q, k_pages, v_pages]
+    if int8:
+        scale_spec = pl.BlockSpec(
+            (1, page_size, Hkv, 1),
+            lambda b, pi, tbl, lens, win: (tbl[b, pi], 0, 0, 0))
+        in_specs += [scale_spec, scale_spec]
+        inputs += [k_scale, v_scale]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(B, n_pages),
-        in_specs=[
-            pl.BlockSpec((1, Hq, D), lambda b, pi, tbl, lens, win: (b, 0, 0)),
-            pl.BlockSpec((1, page_size, Hkv, D),
-                         lambda b, pi, tbl, lens, win: (tbl[b, pi], 0, 0, 0)),
-            pl.BlockSpec((1, page_size, Hkv, D),
-                         lambda b, pi, tbl, lens, win: (tbl[b, pi], 0, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, Hq, D), lambda b, pi, tbl, lens, win: (b, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((Hq,), jnp.float32),
@@ -188,9 +214,10 @@ def paged_decode_attention_fwd(q, k_pages, v_pages, block_table, lengths,
             pltpu.VMEM((Hq, D), jnp.float32),
         ],
     )
+    out_dtype = q.dtype
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, Hq, D), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, D), out_dtype),
         interpret=interpret,
-    )(block_table, lengths, window, q, k_pages, v_pages)
+    )(block_table, lengths, window, *inputs)

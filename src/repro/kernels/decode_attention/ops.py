@@ -15,11 +15,15 @@ def _interpret() -> bool:
 
 
 def decode_attention(q1, k_cache, v_cache, pos, *, window: int | None = None,
-                     block_k: int = 1024):
+                     block_k: int | None = None):
     """q1: (B, 1, Hq, D); caches: (B, S, Hkv, D); pos: scalar int32 valid length.
 
-    Returns (B, 1, Hq, D).
+    ``block_k=None`` resolves the autotuned per-backend default
+    (`repro.kernels.decode_attention.autotune`).  Returns (B, 1, Hq, D).
     """
+    if block_k is None:
+        from repro.kernels.decode_attention.autotune import default_block_k
+        block_k = default_block_k()
     scalars = jnp.stack([jnp.asarray(pos, jnp.int32),
                          jnp.asarray(window if window else -1, jnp.int32)])
     out = decode_attention_fwd(q1[:, 0], k_cache, v_cache, scalars,
@@ -28,7 +32,7 @@ def decode_attention(q1, k_cache, v_cache, pos, *, window: int | None = None,
 
 
 def decode_attention_paged(q1, k_pages, v_pages, block_table, lengths, *,
-                           window=None):
+                           window=None, k_scale=None, v_scale=None):
     """Block-table decode attention over a paged KV pool.
 
     q1: (B, 1, Hq, D); pages: (P, page_size, Hkv, D); block_table: (B, n)
@@ -36,13 +40,15 @@ def decode_attention_paged(q1, k_pages, v_pages, block_table, lengths, *,
     lengths: (B,) valid logical entries per row, including the current token.
     ``window`` may be a python int/None or a traced int32 scalar (-1 / None =
     unlimited), so the call sites inside a scanned layer stack can pass the
-    per-layer window.  Returns (B, 1, Hq, D).
+    per-layer window.  ``k_scale``/``v_scale``: (P, page_size, Hkv, 1) f32
+    pools for int8 pages (dequantized in-kernel).  Returns (B, 1, Hq, D).
     """
     win = jnp.reshape(jnp.asarray(-1 if window is None else window, jnp.int32),
                       (1,))
     out = paged_decode_attention_fwd(
         q1[:, 0], k_pages, v_pages, jnp.asarray(block_table, jnp.int32),
-        jnp.asarray(lengths, jnp.int32), win, interpret=_interpret())
+        jnp.asarray(lengths, jnp.int32), win, k_scale=k_scale, v_scale=v_scale,
+        interpret=_interpret())
     return out[:, None]
 
 

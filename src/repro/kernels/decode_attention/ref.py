@@ -49,3 +49,13 @@ def paged_decode_attention_ref(q, k_pages, v_pages, block_table, lengths,
     w = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgs,bshd->bhgd", w, v.astype(jnp.float32))
     return o.reshape(B, Hq, D).astype(q.dtype)
+
+
+def paged_decode_attention_int8_ref(q, k_pages, v_pages, k_scale, v_scale,
+                                    block_table, lengths,
+                                    window: int | None = None):
+    """Int8 oracle: dequantize the whole pool, then the fp gather path --
+    the route the int8 engine used before the kernel learned int8 pages."""
+    kf = k_pages.astype(jnp.float32) * k_scale
+    vf = v_pages.astype(jnp.float32) * v_scale
+    return paged_decode_attention_ref(q, kf, vf, block_table, lengths, window)

@@ -1,0 +1,42 @@
+"""Jit-ready fused sampling epilogue: argmax token + chosen-token logprob.
+
+Two implementations behind one call:
+
+* the pure-jnp fusion (default) -- max / streaming-free logsumexp /
+  one-element gather; XLA fuses it into the lm-head matmul's consumer, so no
+  normalized (B, V) log-prob tensor is ever written to memory;
+* the Pallas streaming kernel (``use_kernel=True``) for the TPU tier, one
+  vocab pass through VMEM.
+
+Both are token-exact vs the ``log_softmax`` oracle (``ref.py``); ties break
+like ``jnp.argmax`` (first maximal index).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sampling.kernel import greedy_epilogue_fwd
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def greedy_epilogue(logits, *, use_kernel: bool = False, block_v: int = 2048):
+    """logits: (B, V) f32 -> (token (B,) int32, logprob (B,) f32).
+
+    The chosen token's logprob is ``max(logits) - logsumexp(logits)`` -- the
+    full-vocab ``log_softmax`` is never materialized.
+    """
+    if use_kernel:
+        return greedy_epilogue_fwd(logits, block_v=block_v,
+                                   interpret=_interpret())
+    x = logits.astype(jnp.float32)
+    m = jnp.max(x, axis=-1)
+    tok = jnp.argmax(x, axis=-1).astype(jnp.int32)
+    lse = m + jnp.log(jnp.sum(jnp.exp(x - m[:, None]), axis=-1))
+    return tok, m - lse
+
+
+__all__ = ["greedy_epilogue"]

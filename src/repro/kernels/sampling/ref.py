@@ -1,0 +1,17 @@
+"""Oracle for the fused sampling epilogue: materialize log_softmax, gather."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy_epilogue_ref(logits):
+    """logits: (B, V) -> (token (B,) int32, logprob (B,) f32) via the full
+    normalized log-prob tensor (what the pre-fusion decode epilogue did)."""
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    tok = jnp.argmax(lp, axis=-1).astype(jnp.int32)
+    chosen = jnp.take_along_axis(lp, tok[:, None], axis=-1)[:, 0]
+    return tok, chosen
+
+
+__all__ = ["greedy_epilogue_ref"]

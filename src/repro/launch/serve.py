@@ -55,8 +55,11 @@ class ServeBackend:
                  policy=None, adapt_period_s: float = 5.0,
                  provision_delay_s: float = 3.0, app_window_s: float = 10.0,
                  starting_slots: int = 1, stall_steps: float = 50.0,
-                 pools=None, sla=None):
+                 pools=None, sla=None, decode_steps: int = 1):
         self.eng = eng
+        # tokens each slot advances per virtual second (one K-step device
+        # loop per step); 1 keeps the classic one-token-per-second clock
+        self.decode_steps = max(int(decode_steps), 1)
         self.requests = sorted(requests, key=lambda r: r.arrival_s)
         self.sla_s = sla_s
         self.sla = sla
@@ -98,7 +101,8 @@ class ServeBackend:
                 eng.submit(self.requests[head])
                 head += 1
                 new_arr += 1
-            served = eng.step(now=t)   # slots that advanced, incl. ones that
+            served = eng.step(now=t, decode_steps=self.decode_steps)
+                                       # slots that advanced, incl. ones that
                                        # finished this step (active is already
                                        # drained of them by now)
             # straggler mitigation: evict slots that stopped producing tokens
@@ -148,7 +152,8 @@ class ServeBackend:
             decisions=ctrl.decision_log,
             sla=self.sla,
             classes=classes,
-            extra={"evictions": self.evictions, "engine_steps": eng.step_count},
+            extra={"evictions": self.evictions, "engine_steps": eng.step_count,
+                   "prefill_occupancy": eng.prefill_occupancy},
             **ctrl.plan.report_kwargs(),
         )
 
@@ -163,7 +168,9 @@ def serve(args) -> int:
     model = build_model(cfg)
     params = model.init_params(jax.random.key(args.seed))
     eng = ServingEngine(model, params,
-                        ServeConfig(max_batch=args.batch, max_len=args.max_len))
+                        ServeConfig(max_batch=args.batch, max_len=args.max_len,
+                                    page_size=args.page_size,
+                                    decode_steps=args.decode_steps))
 
     stream = request_stream(n_requests=args.requests, seed=args.seed,
                             mean_prompt=args.mean_prompt,
@@ -198,7 +205,8 @@ def serve(args) -> int:
             return 2
     policy = make_policy(args.policy) if args.policy else None
     backend = ServeBackend(eng, reqs, sla_s=args.sla, horizon_s=args.horizon,
-                           policy=policy, stall_steps=args.stall_steps)
+                           policy=policy, stall_steps=args.stall_steps,
+                           decode_steps=args.decode_steps)
     t0 = time.time()
     try:
         rep = backend.run()
@@ -213,7 +221,9 @@ def serve(args) -> int:
           f"p99 {rep.p99_latency_s:.1f} (virtual s); "
           f"SLA({args.sla}s) violations {100 * rep.violation_rate:.2f}%; "
           f"slots peak {rep.max_units}/{args.batch}; "
-          f"stragglers evicted {backend.evictions}")
+          f"stragglers evicted {backend.evictions}; "
+          f"prefill occupancy {eng.prefill_occupancy:.2f} "
+          f"(page size {eng.kv.page_size if eng.paged else '-'})")
     return 0
 
 
@@ -229,6 +239,13 @@ def main():
     ap.add_argument("--horizon", type=float, default=60.0)
     ap.add_argument("--sla", type=float, default=20.0)
     ap.add_argument("--stall-steps", type=float, default=50.0)
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="KV page size (default: autotuned per backend, see "
+                         "repro.kernels.decode_attention.autotune)")
+    ap.add_argument("--decode-steps", type=int, default=1,
+                    help="tokens each slot advances per virtual second (one "
+                         "K-step device loop per engine step); 1 keeps the "
+                         "classic one-token-per-second virtual clock")
     ap.add_argument("--policy", default=None,
                     help="registered policy name (default: the backend's "
                          "target-tracking rule; see repro.core.scaling)")

@@ -226,11 +226,14 @@ def block_decode(x, bp, window, cache_k, cache_v, pos, cos, sin, cfg: ModelConfi
     if int8_kv:
         cache_ks = ops.write(cache_ks, k_sc, pos)
         cache_vs = ops.write(cache_vs, v_sc, pos)
-    if block_table is not None and use_kernel and not int8_kv:
-        # Pallas path: attend over the page pool directly, no gather
+    if block_table is not None and use_kernel:
+        # Pallas path: attend over the page pool directly, no gather; int8
+        # pools carry their scales into the kernel and dequantize in-register
         from repro.kernels.decode_attention.ops import decode_attention_paged
         o = decode_attention_paged(q, cache_k, cache_v, block_table, pos + 1,
-                                   window=window)
+                                   window=window,
+                                   k_scale=cache_ks if int8_kv else None,
+                                   v_scale=cache_vs if int8_kv else None)
     else:
         k_eff = ops.view(cache_k)
         v_eff = ops.view(cache_v)
@@ -330,10 +333,12 @@ def prefill(params, batch, cfg: ModelConfig, max_len: int | None = None,
             *, use_kernel: bool = False, last_idx=None):
     """Run the prompt, return (last-position logits, cache dict).
 
-    ``last_idx``: traced position of the true last prompt token.  Bucketed
-    prefill pads prompts to a fixed power-of-two length so one compiled shape
-    serves the whole bucket; the causal mask keeps positions <= last_idx
-    independent of the padding, and ``last_idx`` selects the real logits."""
+    ``last_idx``: traced position of the true last prompt token -- a scalar,
+    or a (B,) vector for batched bucketed prefill (each row selects its own
+    last position).  Bucketed prefill pads prompts to a fixed power-of-two
+    length so one compiled shape serves the whole bucket; the causal mask
+    keeps positions <= last_idx independent of the padding, and ``last_idx``
+    selects the real logits."""
     x = _embed_in(params, batch, cfg)
     B, S, _ = x.shape
     max_len = max_len or S
@@ -347,8 +352,12 @@ def prefill(params, batch, cfg: ModelConfig, max_len: int | None = None,
 
     x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"], windows))
     x = rms_norm(x, params["ln_f"], cfg.norm_eps)
-    x_last = (x[:, -1:] if last_idx is None
-              else jax.lax.dynamic_slice_in_dim(x, last_idx, 1, axis=1))
+    if last_idx is None:
+        x_last = x[:, -1:]
+    elif jnp.ndim(last_idx) == 0:
+        x_last = jax.lax.dynamic_slice_in_dim(x, last_idx, 1, axis=1)
+    else:
+        x_last = x[jnp.arange(B), last_idx][:, None]          # per-row select
     logits = _lm_head(params, x_last, cfg)
     if max_len > S:
         pad = ((0, 0), (0, 0), (0, max_len - S), (0, 0), (0, 0))

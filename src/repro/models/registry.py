@@ -23,6 +23,7 @@ class Model:
     decode_step: Callable          # (params, cache, token, pos) -> (logits, cache)
     init_cache: Callable           # (batch, max_len) -> cache
     supports_paged: bool = False   # decode_step accepts block_table= (paged KV)
+    use_kernel: bool = False       # Pallas tier on (decode attn + epilogue)
 
     def abstract_params(self):
         return jax.eval_shape(self.init_params, jax.random.key(0))
@@ -49,6 +50,7 @@ def build_model(cfg: ModelConfig, *, use_kernel: bool = False) -> Model:
         decode_step=partial(mod.decode_step, cfg=cfg, **decode_kwargs),
         init_cache=partial(mod.init_cache, cfg),
         supports_paged=paged,
+        use_kernel=use_kernel,
     )
 
 

@@ -1,5 +1,6 @@
-"""Single-replica serving engine: paged-KV continuous batcher over
-prefill/decode step functions, with straggler mitigation hooks.
+"""Single-replica serving engine: paged-KV continuous batcher with a
+device-resident decode loop, batched bucketed prefill, and straggler
+mitigation hooks.
 
 This is the per-replica substrate the elastic layer (repro.core.elastic)
 scales in and out.  Requests are classed by (prefill_len, decode_len) --
@@ -10,20 +11,27 @@ that drive the paper's auto-scaling policies.  ``Request.score`` is the
 tokens the model actually generated, fed to the control plane's
 ``output_score`` channel by the serve driver.
 
-Serving path (attention families; see DESIGN.md "The serving stack"):
+Serving path (attention families; see DESIGN.md "The device-resident decode
+loop"):
 
 * **paged KV cache** (`repro.serving.kvcache`) -- pages allocated at
   prefill, appended as decode crosses page boundaries, freed on completion;
-* **bucketed prefill** -- prompts are padded to their ``request_class``
-  power-of-two bucket and the true last position is selected with a traced
-  index, so jit retraces are bounded by the number of distinct buckets,
-  not the number of distinct prompt lengths;
-* **active-slot decode** -- one batched heterogeneous-position decode over
-  the *active* slots only, compacted and padded to a power-of-two batch
-  (idle slots cost nothing; trace count is bounded by log2(max_batch)+1).
+* **batched bucketed prefill** -- queued prompts sharing a power-of-two
+  ``request_class`` bucket are coalesced into ONE fixed-width prefill call
+  (padding rows scatter into the trash page), so jit retraces stay bounded
+  by the number of distinct buckets and per-request dispatch is amortized;
+* **device-resident decode** -- one jitted ``lax.while_loop`` advances the
+  compacted active-slot batch up to K steps entirely on device, carrying
+  tokens, positions, remaining budgets, eos/finish masks, and running
+  logprob-score sums; the fused sampling epilogue
+  (`repro.kernels.sampling`) picks each next token and its logprob without
+  materializing a normalized (B, V) tensor, and the host syncs (one
+  ``np.asarray`` round trip, one block-table upload) only every K steps or
+  when a slot finishes.
 
 Families without a paged decode path (ssm/hybrid, audio/encdec) fall back
-to the legacy dense tree cache, which batch-decodes every slot.
+to the legacy dense tree cache, which batch-decodes every slot -- through
+the same K-step device loop.
 """
 from __future__ import annotations
 
@@ -34,8 +42,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.decode_attention import autotune
+from repro.kernels.sampling.ops import greedy_epilogue
 from repro.models.registry import Model
-from repro.serving.kvcache import PagedKVCache
+from repro.serving.kvcache import TRASH_PAGE, PagedKVCache
 
 
 def _bucket(n: int) -> int:
@@ -68,17 +78,22 @@ class ServeConfig:
     eos_token: int = -1                # -1: run to max_new_tokens
     greedy: bool = True
     paged: bool = True                 # paged KV cache (attention families)
-    page_size: int = 16
+    page_size: int | None = None       # None: autotuned per-backend default
     num_pages: int | None = None       # default: max_batch*(max_len/ps) + trash
+    decode_steps: int = 8              # device-resident steps per host sync
+    prefill_batch: int | None = None   # coalesced prefill width (None: max_batch)
 
 
 class ServingEngine:
     """Synchronous continuous batcher (slot-based).
 
-    One decode step advances every *active* slot; finished slots release
-    their pages and are refilled from the queue with a fresh bucketed
-    prefill.  This mirrors production continuous batching while staying
-    simple enough to run under interpret-mode tests.
+    ``step()`` advances every *active* slot by up to ``decode_steps`` tokens
+    in one jitted device loop (default 1 -- the control-plane drivers step
+    virtual time one token at a time); finished slots release their pages
+    and are refilled from the queue with a batched bucketed prefill.
+    ``run_until_drained`` runs at the full ``cfg.decode_steps`` sync cadence.
+    This mirrors production continuous batching while staying simple enough
+    to run under interpret-mode tests.
     """
 
     def __init__(self, model: Model, params, cfg: ServeConfig):
@@ -94,10 +109,15 @@ class ServingEngine:
         self.remaining = np.zeros(cfg.max_batch, dtype=np.int32)
         self.completed: list[Request] = []
         self.step_count = 0
+        self.decode_steps = max(int(cfg.decode_steps), 1)
+        self.prefill_batch = int(cfg.prefill_batch or cfg.max_batch)
+        self._prefill_rows = 0                     # real rows batched-prefilled
+        self._prefill_width = 0                    # padded rows dispatched
         self.paged = cfg.paged and model.supports_paged
         if self.paged:
+            page_size = cfg.page_size or autotune.default_page_size()
             self.kv = PagedKVCache(model.init_cache, max_batch=cfg.max_batch,
-                                   max_len=cfg.max_len, page_size=cfg.page_size,
+                                   max_len=cfg.max_len, page_size=page_size,
                                    num_pages=cfg.num_pages)
             self._prefill_jit = jax.jit(self._paged_prefill_fn)
             self._decode_jit = jax.jit(self._paged_decode_fn)
@@ -111,40 +131,89 @@ class ServingEngine:
     # (bound methods: `self` is closed over, only array args are traced)
 
     def _paged_prefill_fn(self, params, pages, toks, last_idx, page_ids):
-        """Bucketed prefill: toks (1, pb) zero-padded; retraces once per
-        distinct bucket pb.  Scatters the prompt's KV into its pages (bucket
-        overhang lands in the trash page) and returns the greedy first token
-        with its logprob."""
+        """Batched bucketed prefill: toks (nb, pb) zero-padded rows sharing
+        one bucket pb; retraces once per distinct bucket (nb is the fixed
+        ``prefill_batch`` width).  Scatters each prompt's KV into its pages
+        (bucket overhang and padding rows land in the trash page) and
+        returns each row's greedy first token with its logprob."""
         from repro.serving.kvcache import write_prefill_pages
-        logits, cache1 = self.model.prefill(
+        logits, cache = self.model.prefill(
             params, {"tokens": toks}, max_len=int(toks.shape[1]),
             last_idx=last_idx)
-        lp = jax.nn.log_softmax(logits[0, -1])
-        tok = jnp.argmax(lp)
-        pages = write_prefill_pages(pages, cache1, page_ids)
-        return tok, lp[tok], pages
+        tok, lp = greedy_epilogue(logits[:, 0],
+                                  use_kernel=self.model.use_kernel)
+        pages = write_prefill_pages(pages, cache, page_ids)
+        return tok, lp, pages
 
-    def _paged_decode_fn(self, params, pages, toks, pos, tbl):
-        """One decode for a compacted active-slot batch (padding rows carry
-        the trash-page table and write/attend harmlessly)."""
-        logits, pages = self.model.decode_step(params, pages, toks, pos,
-                                               block_table=tbl)
-        lp = jax.nn.log_softmax(logits[:, 0], axis=-1)
-        tok = jnp.argmax(lp, axis=-1)
-        return tok, jnp.take_along_axis(lp, tok[:, None], axis=1)[:, 0], pages
+    def _decode_loop(self, params, kv, toks, pos, rem, live, n_steps, step_fn):
+        """Up to ``n_steps`` greedy decode steps entirely on device.
+
+        Carried state: KV storage, last tokens (na, 1), per-row positions /
+        remaining budgets, the live mask (rows park when their budget runs
+        out or they emit eos -- their KV writes keep landing in pages they
+        still own, harmlessly), the emitted-token buffer, and running
+        logprob sums.  ``n_steps`` is a traced operand, so K=1 control-plane
+        steps and K=decode_steps drain bursts share one compiled loop per
+        power-of-two batch size; the loop exits early once every row parks.
+        """
+        K = self.decode_steps
+        na = toks.shape[0]
+        eos = int(self.cfg.eos_token)
+        carry = dict(
+            i=jnp.int32(0), kv=kv, toks=toks, pos=pos, rem=rem, live=live,
+            out_toks=jnp.full((na, K), -1, jnp.int32),
+            lp_sum=jnp.zeros((na,), jnp.float32),
+            n_emit=jnp.zeros((na,), jnp.int32),
+        )
+
+        def cond(c):
+            return (c["i"] < n_steps) & jnp.any(c["live"])
+
+        def body(c):
+            logits, kv = step_fn(params, c["kv"], c["toks"], c["pos"])
+            tok, lp = greedy_epilogue(logits[:, 0],
+                                      use_kernel=self.model.use_kernel)
+            live = c["live"]
+            emit = jnp.where(live, tok, -1)
+            out_toks = jax.lax.dynamic_update_slice(
+                c["out_toks"], emit[:, None], (jnp.int32(0), c["i"]))
+            inc = live.astype(jnp.int32)
+            rem = c["rem"] - inc
+            nxt = jnp.where(live, tok, c["toks"][:, 0])[:, None]
+            live = live & (rem > 0)
+            if eos >= 0:
+                live = live & (tok != eos)
+            return dict(i=c["i"] + 1, kv=kv, toks=nxt, pos=c["pos"] + inc,
+                        rem=rem, live=live, out_toks=out_toks,
+                        lp_sum=c["lp_sum"] + jnp.where(c["live"], lp, 0.0),
+                        n_emit=c["n_emit"] + inc)
+
+        c = jax.lax.while_loop(cond, body, carry)
+        return (c["kv"], c["out_toks"], c["lp_sum"], c["n_emit"], c["pos"],
+                c["rem"], c["i"])
+
+    def _paged_decode_fn(self, params, pages, toks, pos, rem, live, tbl,
+                         n_steps):
+        """K-step device loop for a compacted active-slot batch (padding
+        rows carry the trash-page table and write/attend harmlessly)."""
+        return self._decode_loop(
+            params, pages, toks, pos, rem, live, n_steps,
+            lambda p, kv, tk, ps: self.model.decode_step(p, kv, tk, ps,
+                                                         block_table=tbl))
 
     def _dense_prefill_fn(self, params, batch):
         logits, cache1 = self.model.prefill(params, batch,
                                             max_len=self.cfg.max_len)
-        lp = jax.nn.log_softmax(logits[0, -1])
-        tok = jnp.argmax(lp)
-        return tok, lp[tok], cache1
+        tok, lp = greedy_epilogue(logits[:, -1],
+                                  use_kernel=self.model.use_kernel)
+        return tok[0], lp[0], cache1
 
-    def _dense_decode_fn(self, params, cache, toks, pos):
-        logits, cache = self.model.decode_step(params, cache, toks, pos)
-        lp = jax.nn.log_softmax(logits[:, 0], axis=-1)
-        tok = jnp.argmax(lp, axis=-1)
-        return tok, jnp.take_along_axis(lp, tok[:, None], axis=1)[:, 0], cache
+    def _dense_decode_fn(self, params, cache, toks, pos, rem, live, n_steps):
+        """K-step device loop over the full dense tree cache -- idle slots
+        compute garbage that the live mask discards."""
+        return self._decode_loop(
+            params, cache, toks, pos, rem, live, n_steps,
+            lambda p, kv, tk, ps: self.model.decode_step(p, kv, tk, ps))
 
     # -- queue interface ----------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -165,14 +234,21 @@ class ServingEngine:
 
     @property
     def prefill_trace_count(self) -> int:
-        """Compiled prefill variants -- bounded by the distinct buckets seen."""
+        """Compiled prefill variants -- bounded by the distinct buckets seen
+        (the batch dim is the fixed ``prefill_batch`` width)."""
         return int(self._prefill_jit._cache_size())
 
     @property
     def decode_trace_count(self) -> int:
         """Compiled decode variants -- bounded by ceil(log2(max_batch))+1
-        (paged: one per power-of-two active-batch size)."""
+        (paged: one per power-of-two active-batch size; the K-step loop
+        takes its step count as a traced operand)."""
         return int(self._decode_jit._cache_size())
+
+    @property
+    def prefill_occupancy(self) -> float:
+        """Real rows per dispatched prefill row (1.0 = no padding waste)."""
+        return self._prefill_rows / max(self._prefill_width, 1)
 
     # -- slot lifecycle -----------------------------------------------------------
     def _reset_slot(self, slot: int) -> None:
@@ -196,49 +272,89 @@ class ServingEngine:
         return req
 
     # -- scheduling ---------------------------------------------------------------
-    def _prefill_into(self, slot: int, req: Request, install: bool):
-        """Run one bucketed prefill; install the KV into ``slot`` unless the
-        request finishes at fill time (install=False skips allocation -- the
-        bucket scatter lands entirely in the trash page)."""
-        prompt = np.asarray(req.prompt, np.int32)
-        plen = len(prompt)
-        if self.paged:
-            # bucket >= page_size so the padded prompt is a whole number of
-            # page chunks (both are powers of two; max_len is page-aligned)
-            pb = min(max(_bucket(plen), self.kv.page_size), self.cfg.max_len)
-            padded = np.zeros((1, pb), np.int32)
-            padded[0, :plen] = prompt
-            n_chunks = pb // self.kv.page_size
+    def _note_prefilled(self, slot: int, req: Request, install: bool,
+                        tok: int, logp: float, now: float) -> int:
+        """Shared post-prefill bookkeeping (paged and dense paths): record
+        the first token and its score; either finish at fill time (the
+        prefill token was the whole budget) or install the request into its
+        slot.  Returns 1 for a fill-time completion, else 0."""
+        req.output.append(tok)
+        req.first_token_s = now
+        req.score += (logp - req.score) / len(req.output)
+        if not install:
+            # the prefill token is the whole budget: finish at fill time
+            # (a decode here would emit max_new_tokens + 1 tokens)
+            req.done_s = now
+            self.completed.append(req)
+            return 1
+        self.pos[slot] = len(req.prompt)
+        self.remaining[slot] = req.max_new_tokens - 1
+        self.active[slot] = req
+        return 0
+
+    def _prefill_group(self, group, pb: int, now: float) -> int:
+        """One batched bucketed prefill over ``group`` [(slot, req, install)]
+        rows sharing bucket ``pb``; returns the number of fill-time
+        completions (single-token budgets spent by the prefill argmax)."""
+        width = self.prefill_batch
+        n_chunks = pb // self.kv.page_size
+        toks = np.zeros((width, pb), np.int32)
+        last_idx = np.zeros((width,), np.int32)
+        page_ids = np.full((width, n_chunks), TRASH_PAGE, np.int32)
+        for j, (slot, req, install) in enumerate(group):
+            prompt = np.asarray(req.prompt, np.int32)
+            plen = len(prompt)
+            toks[j, :plen] = prompt
+            last_idx[j] = plen - 1
             if install:
                 total = plen + req.max_new_tokens - 1
-                page_ids = self.kv.alloc_prefill(slot, plen, total, n_chunks)
-            else:
-                page_ids = np.zeros(n_chunks, np.int32)
-            tok, logp, self.kv.pages = self._prefill_jit(
-                self.params, self.kv.pages, jnp.asarray(padded),
-                jnp.int32(plen - 1), jnp.asarray(page_ids))
-        else:
-            tok, logp, cache1 = self._prefill_jit(
-                self.params, {"tokens": jnp.asarray(prompt)[None]})
-            if install:
-                if self.cache is None:
-                    self.cache = jax.tree.map(
-                        lambda c: jnp.repeat(jnp.zeros_like(c),
-                                             self.cfg.max_batch, axis=1),
-                        cache1)
-                # install the prefilled cache into the slot (batch dim = axis 1)
+                page_ids[j] = self.kv.alloc_prefill(slot, plen, total,
+                                                    n_chunks)
+        tokv, lpv, self.kv.pages = self._prefill_jit(
+            self.params, self.kv.pages, jnp.asarray(toks),
+            jnp.asarray(last_idx), jnp.asarray(page_ids))
+        tokv = np.asarray(tokv)
+        lpv = np.asarray(lpv)
+        self._prefill_rows += len(group)
+        self._prefill_width += width
+        fill_done = 0
+        for j, (slot, req, install) in enumerate(group):
+            fill_done += self._note_prefilled(slot, req, install,
+                                              int(tokv[j]), float(lpv[j]), now)
+        return fill_done
+
+    def _dense_prefill_into(self, slot: int, req: Request, install: bool):
+        """Legacy dense path: one prefill per request, cache installed into
+        the slot's rows of the dense tree cache."""
+        prompt = np.asarray(req.prompt, np.int32)
+        tok, logp, cache1 = self._prefill_jit(
+            self.params, {"tokens": jnp.asarray(prompt)[None]})
+        if install:
+            if self.cache is None:
                 self.cache = jax.tree.map(
-                    lambda full, one: jax.lax.dynamic_update_slice_in_dim(
-                        full, one.astype(full.dtype), slot, axis=1),
-                    self.cache, cache1)
+                    lambda c: jnp.repeat(jnp.zeros_like(c),
+                                         self.cfg.max_batch, axis=1),
+                    cache1)
+            # install the prefilled cache into the slot (batch dim = axis 1)
+            self.cache = jax.tree.map(
+                lambda full, one: jax.lax.dynamic_update_slice_in_dim(
+                    full, one.astype(full.dtype), slot, axis=1),
+                self.cache, cache1)
         return int(tok), float(logp)
 
+    def _prefill_bucket(self, req: Request) -> int:
+        # bucket >= page_size so the padded prompt is a whole number of
+        # page chunks (both are powers of two; max_len is page-aligned)
+        return min(max(_bucket(len(req.prompt)), self.kv.page_size),
+                   self.cfg.max_len)
+
     def _fill_slots(self, now: float) -> int:
-        """Refill free slots from the queue; returns the number of requests
-        that finished at fill time (max_new_tokens budget spent by the
-        prefill token).  Such a request still consumes its slot for this
-        step -- the prefill ran there -- so the slot cap bounds prefill work
-        exactly like decode work."""
+        """Refill free slots from the queue -- paged: coalescing same-bucket
+        head-of-queue prompts into batched prefill calls.  Returns the number
+        of requests that finished at fill time (max_new_tokens budget spent
+        by the prefill token).  Such a request still consumes its slot for
+        this step -- the prefill ran there -- so the slot cap bounds prefill
+        work exactly like decode work."""
         limit = min(self.slot_limit, self.cfg.max_batch)
         free = [s for s in range(self.cfg.max_batch) if s not in self.active]
         if self.paged:
@@ -255,26 +371,45 @@ class ServingEngine:
                 req.done_s = now
                 self.completed.append(req)
                 continue
-            install = req.max_new_tokens > 1
-            if self.paged and install and not self.kv.can_admit(
-                    len(req.prompt) + req.max_new_tokens - 1):
-                break        # defer admission until completions free pages
-            self.queue.pop(0)
-            slot = free.pop(0)
-            tok, logp = self._prefill_into(slot, req, install)
-            req.output.append(tok)
-            req.first_token_s = now
-            req.score += (logp - req.score) / len(req.output)
-            if not install:
-                # the prefill token is the whole budget: finish at fill time
-                # (a decode here would emit max_new_tokens + 1 tokens)
-                req.done_s = now
-                self.completed.append(req)
-                fill_done += 1
+            if not self.paged:
+                install = req.max_new_tokens > 1
+                self.queue.pop(0)
+                slot = free.pop(0)
+                tok, logp = self._dense_prefill_into(slot, req, install)
+                self._prefill_rows += 1            # dense fills one at a time
+                self._prefill_width += 1
+                fill_done += self._note_prefilled(slot, req, install,
+                                                  tok, logp, now)
                 continue
-            self.pos[slot] = len(req.prompt)
-            self.remaining[slot] = req.max_new_tokens - 1
-            self.active[slot] = req
+            # paged: collect a same-bucket FIFO group for one batched prefill
+            pb = self._prefill_bucket(req)
+            group: list[tuple[int, Request, bool]] = []
+            planned = 0                  # worst-case pages promised to group
+            blocked = False
+            while (self.queue and free and len(group) < self.prefill_batch
+                   and len(self.active) + fill_done + len(group) < limit):
+                r = self.queue[0]
+                if r.max_new_tokens <= 0:
+                    self.queue.pop(0)
+                    r.done_s = now
+                    self.completed.append(r)
+                    continue
+                if self._prefill_bucket(r) != pb:
+                    break                # next bucket fills in the next group
+                install = r.max_new_tokens > 1
+                total = len(r.prompt) + r.max_new_tokens - 1
+                if install and not self.kv.can_admit(total, planned):
+                    blocked = True       # defer until completions free pages
+                    break
+                if install:
+                    planned += self.kv.pages_needed(total)
+                self.queue.pop(0)
+                group.append((free.pop(0), r, install))
+            if not group:
+                break                    # head of queue blocked on pages
+            fill_done += self._prefill_group(group, pb, now)
+            if blocked:
+                break
         return fill_done
 
     def _finish(self, slot: int, now: float) -> None:
@@ -283,83 +418,117 @@ class ServingEngine:
         self.completed.append(req)
         self._reset_slot(slot)
 
-    def _decode_active_paged(self, now: float) -> int:
-        """One batched heterogeneous-position decode over the active slots
-        only, compacted and padded to a power-of-two batch."""
-        slots = sorted(self.active)
-        n = len(slots)
-        na = 1 << max(int(np.ceil(np.log2(n))), 0)
-        toks = np.zeros((na, 1), np.int32)
-        posv = np.zeros((na,), np.int32)
-        tblv = np.zeros((na, self.kv.pages_per_slot), np.int32)
-        for i, s in enumerate(slots):
-            self.kv.ensure_writable(s, int(self.pos[s]))
-            toks[i, 0] = self.active[s].output[-1]
-            posv[i] = self.pos[s]
-            tblv[i] = self.kv.block_table[s]
-        tok, logp, self.kv.pages = self._decode_jit(
-            self.params, self.kv.pages, jnp.asarray(toks), jnp.asarray(posv),
-            jnp.asarray(tblv))
-        tok = np.asarray(tok)
-        logp = np.asarray(logp)
+    def _apply_decode_outputs(self, rows, out_toks, lp_sum, n_emit, pos_out,
+                              rem_out, now: float) -> None:
+        """Fold one device-loop sync back into host bookkeeping.
+
+        ``rows``: [(batch row, slot)] -- compacted index order for the paged
+        path, identity (slot == row) for the dense path."""
+        out_toks = np.asarray(out_toks)
+        lp_sum = np.asarray(lp_sum)
+        n_emit = np.asarray(n_emit)
+        pos_out = np.asarray(pos_out)
+        rem_out = np.asarray(rem_out)
         finished = []
-        for i, s in enumerate(slots):
+        for i, s in rows:
+            ne = int(n_emit[i])
+            if ne == 0:
+                continue
             req = self.active[s]
-            t = int(tok[i])
-            req.output.append(t)
-            req.score += (float(logp[i]) - req.score) / len(req.output)
-            self.pos[s] += 1
-            self.remaining[s] -= 1
-            if self.remaining[s] <= 0 or t == self.cfg.eos_token:
+            prev = len(req.output)
+            req.output.extend(int(t) for t in out_toks[i, :ne])
+            req.score = (req.score * prev + float(lp_sum[i])) / (prev + ne)
+            self.pos[s] = int(pos_out[i])
+            self.remaining[s] = int(rem_out[i])
+            if rem_out[i] <= 0 or req.output[-1] == self.cfg.eos_token:
                 finished.append(s)
         for s in finished:
             self._finish(s, now)
-        return n
 
-    def _decode_all_dense(self, now: float) -> int:
+    def _decode_active_paged(self, now: float, k: int = 1) -> tuple[int, int]:
+        """Up to ``k`` batched heterogeneous-position decode steps over the
+        active slots only, compacted and padded to a power-of-two batch, in
+        one device loop.  Returns (slots served, device steps executed)."""
+        slots = sorted(self.active)
+        n = len(slots)
+        if n == 0:
+            return 0, 0                  # guard: np.log2(0) and an empty jit
+        na = 1 << max(int(np.ceil(np.log2(n))), 0)
+        toks = np.zeros((na, 1), np.int32)
+        posv = np.zeros((na,), np.int32)
+        remv = np.zeros((na,), np.int32)
+        livev = np.zeros((na,), bool)
+        tblv = np.zeros((na, self.kv.pages_per_slot), np.int32)
+        for i, s in enumerate(slots):
+            # pre-allocate every page the next k on-device writes may touch
+            span = min(k, int(self.remaining[s]))
+            self.kv.ensure_writable_span(s, int(self.pos[s]), max(span, 1))
+            toks[i, 0] = self.active[s].output[-1]
+            posv[i] = self.pos[s]
+            remv[i] = self.remaining[s]
+            livev[i] = True
+            tblv[i] = self.kv.block_table[s]
+        self.kv.pages, out_toks, lp_sum, n_emit, pos_out, rem_out, iters = \
+            self._decode_jit(self.params, self.kv.pages, jnp.asarray(toks),
+                             jnp.asarray(posv), jnp.asarray(remv),
+                             jnp.asarray(livev), jnp.asarray(tblv),
+                             jnp.int32(k))
+        self._apply_decode_outputs(list(enumerate(slots)), out_toks, lp_sum,
+                                   n_emit, pos_out, rem_out, now)
+        return n, int(iters)
+
+    def _decode_all_dense(self, now: float, k: int = 1) -> tuple[int, int]:
         """Legacy fallback (no paged cache): batch-decode every slot of the
-        dense tree cache -- idle slots compute garbage that is discarded."""
+        dense tree cache -- idle slots compute garbage that is discarded.
+        Returns (slots served, device steps executed)."""
+        slots = sorted(self.active)
+        if not slots:
+            return 0, 0                  # guard: empty active set
         toks = np.zeros((self.cfg.max_batch, 1), np.int32)
+        livev = np.zeros((self.cfg.max_batch,), bool)
         for slot, req in self.active.items():
             toks[slot, 0] = req.output[-1]
-        tok, logp, self.cache = self._decode_jit(
-            self.params, self.cache, jnp.asarray(toks), jnp.asarray(self.pos))
-        tok = np.asarray(tok)
-        logp = np.asarray(logp)
-        n = len(self.active)
-        finished = []
-        for slot, req in self.active.items():
-            t = int(tok[slot])
-            req.output.append(t)
-            req.score += (float(logp[slot]) - req.score) / len(req.output)
-            self.pos[slot] += 1
-            self.remaining[slot] -= 1
-            if self.remaining[slot] <= 0 or t == self.cfg.eos_token:
-                finished.append(slot)
-        for slot in finished:
-            self._finish(slot, now)
-        return n
+            livev[slot] = True
+        self.cache, out_toks, lp_sum, n_emit, pos_out, rem_out, iters = \
+            self._decode_jit(self.params, self.cache, jnp.asarray(toks),
+                             jnp.asarray(self.pos), jnp.asarray(self.remaining),
+                             jnp.asarray(livev), jnp.int32(k))
+        self._apply_decode_outputs([(s, s) for s in slots], out_toks, lp_sum,
+                                   n_emit, pos_out, rem_out, now)
+        return len(slots), int(iters)
 
-    def step(self, now: float | None = None) -> int:
-        """One engine step: refill + one batched decode over the active
-        slots.  Returns the number of slots that served work this step
-        (decodes plus fill-time completions)."""
+    def step(self, now: float | None = None, *,
+             decode_steps: int | None = None) -> int:
+        """One engine step: refill + one batched device loop over the active
+        slots (``decode_steps`` tokens per slot, default 1).  Returns the
+        number of slots that served work this step (decodes plus fill-time
+        completions)."""
         now = time.monotonic() if now is None else now
+        k = max(int(decode_steps or 1), 1)
+        if k > self.decode_steps:
+            # the emitted-token carry buffer is cfg.decode_steps wide (a
+            # trace-time constant); silently clamping would make a driver's
+            # virtual clock drift from what the engine actually served
+            raise ValueError(
+                f"decode_steps={k} > ServeConfig.decode_steps="
+                f"{self.decode_steps}; raise the config to burst this far")
         fill_done = self._fill_slots(now)
         if not self.active:
             if fill_done:
                 self.step_count += 1
             return fill_done
-        served = (self._decode_active_paged(now) if self.paged
-                  else self._decode_all_dense(now))
-        self.step_count += 1
+        served, iters = (self._decode_active_paged(now, k) if self.paged
+                         else self._decode_all_dense(now, k))
+        self.step_count += max(iters, 1)
         return served + fill_done
 
     def run_until_drained(self, max_steps: int = 10_000) -> None:
+        """Drain queue + active set at the full device-resident sync cadence
+        (``cfg.decode_steps`` tokens between host round trips)."""
         for _ in range(max_steps):
             if not self.queue and not self.active:
                 return
-            self.step()
+            self.step(decode_steps=self.decode_steps)
         raise RuntimeError("engine failed to drain")
 
 

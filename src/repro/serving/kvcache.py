@@ -70,22 +70,26 @@ def paged_gather(cache, block_table):
     return flat[idx]
 
 
-def write_prefill_pages(pages, cache_one, page_ids):
-    """Scatter a single-request prefill cache into the pool, page-chunked.
+def write_prefill_pages(pages, cache, page_ids):
+    """Scatter a batched prefill cache into the pool, page-chunked.
 
-    pages: pytree of (L, P, ps, *rest); cache_one: matching pytree of
-    (L, 1, pb, *rest) with pb a multiple of ps; page_ids: (pb // ps,) int32 --
-    real pages first, trash (0) for the bucket overhang past the prompt.
+    pages: pytree of (L, P, ps, *rest); cache: matching pytree of
+    (L, B, pb, *rest) with pb a multiple of ps; page_ids: (B, pb // ps) int32
+    (or (pb // ps,) for B == 1) -- real pages first, trash (0) for the bucket
+    overhang past each prompt.  Real page ids are unique across rows (free-
+    list ownership); several rows may scatter their overhang into the trash
+    page, where any of the duplicate writes may win -- all are garbage.
     """
+    ids = jnp.reshape(jnp.asarray(page_ids, jnp.int32), (-1,))
 
     def scatter(pg, c):
         L, _, ps = pg.shape[:3]
         rest = pg.shape[3:]
-        nc = c.shape[2] // ps
-        chunks = c[:, 0].reshape((L, nc, ps) + rest).astype(pg.dtype)
-        return pg.at[:, page_ids].set(chunks)
+        B, nc = c.shape[1], c.shape[2] // ps
+        chunks = c.reshape((L, B * nc, ps) + rest).astype(pg.dtype)
+        return pg.at[:, ids].set(chunks)
 
-    return jax.tree.map(scatter, pages, cache_one)
+    return jax.tree.map(scatter, pages, cache)
 
 
 # ---------------------------------------------------------------------------------
@@ -196,10 +200,15 @@ class PagedKVCache:
     def pages_needed(self, n_tokens: int) -> int:
         return max(math.ceil(n_tokens / self.page_size), 1)
 
-    def can_admit(self, total_tokens: int) -> bool:
+    def can_admit(self, total_tokens: int, planned: int = 0) -> bool:
         """True if the pool can guarantee a request writing ``total_tokens``
-        logical positions (prompt + decode appends) will never starve."""
-        return self.pages_needed(total_tokens) <= self.n_free - self._outstanding
+        logical positions (prompt + decode appends) will never starve.
+
+        ``planned``: worst-case pages already promised to co-admitted
+        requests whose allocation has not executed yet (batched prefill
+        collects a group before allocating any of it)."""
+        return (self.pages_needed(total_tokens)
+                <= self.n_free - self._outstanding - planned)
 
     # -- lifecycle --------------------------------------------------------------
     def alloc_prefill(self, slot: int, prompt_len: int, total_tokens: int,
@@ -225,16 +234,32 @@ class PagedKVCache:
     def ensure_writable(self, slot: int, pos: int) -> None:
         """Append a page if the next write at logical ``pos`` crosses into an
         unallocated page (decode-time growth)."""
-        page_idx = pos // self.page_size
-        if page_idx < self.held[slot]:
+        self.ensure_writable_span(slot, pos, 1)
+
+    def ensure_writable_span(self, slot: int, pos: int, n: int) -> None:
+        """Make logical positions [pos, pos + n) of ``slot`` writable,
+        appending pages as needed.
+
+        This is the device-resident decode loop's contract: the host
+        pre-allocates every page the next K on-device steps may write, so the
+        jitted multi-step loop never has to sync back for a page append.  The
+        span is bounded by the slot's remaining token budget, which the
+        admission reservation already covers -- pre-allocating it early can
+        never starve another slot's reserved append.
+        """
+        if n <= 0:
             return
-        if page_idx != self.held[slot]:
+        last_page = (pos + n - 1) // self.page_size
+        if last_page >= self.pages_per_slot:
+            raise RuntimeError(f"span past slot capacity at slot {slot}")
+        if self.held[slot] < pos // self.page_size:
             raise RuntimeError(f"non-contiguous page growth at slot {slot}")
-        if not self._free:
-            raise RuntimeError("page pool exhausted despite reservation")
-        self.block_table[slot, page_idx] = self._free.pop()
-        self.held[slot] += 1
-        self._outstanding -= 1
+        while self.held[slot] <= last_page:
+            if not self._free:
+                raise RuntimeError("page pool exhausted despite reservation")
+            self.block_table[slot, self.held[slot]] = self._free.pop()
+            self.held[slot] += 1
+            self._outstanding -= 1
 
     def release(self, slot: int) -> None:
         """Return every page ``slot`` holds and drop its reservation."""

@@ -1,0 +1,194 @@
+"""Device-resident decode loop: fused epilogue exactness, K-step scan ==
+K single steps (incl. mid-scan eos), batched bucketed prefill, empty-active
+guards, and span page pre-allocation across a K-burst."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.serving import Request, ServeConfig, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def smol():
+    cfg = get_smoke_config("smollm-135m")
+    m = build_model(cfg)
+    params = m.init_params(jax.random.key(0))
+    return cfg, m, params
+
+
+def test_fused_epilogue_matches_log_softmax_oracle():
+    """The fused argmax + chosen-token logprob (max - logsumexp) is
+    token-exact and logprob-close vs materializing log_softmax, including
+    on exact ties (first maximal index wins, like jnp.argmax)."""
+    from repro.kernels.sampling.ops import greedy_epilogue
+    from repro.kernels.sampling.ref import greedy_epilogue_ref
+    logits = jax.random.normal(jax.random.key(3), (8, 977)) * 6.0
+    # plant exact ties on two rows
+    logits = logits.at[0, 11].set(50.0).at[0, 503].set(50.0)
+    logits = logits.at[1, 900].set(-1.0 + logits[1].max() + 1.0)
+    tok, lp = greedy_epilogue(logits)
+    tok_ref, lp_ref = greedy_epilogue_ref(logits)
+    np.testing.assert_array_equal(np.asarray(tok), np.asarray(tok_ref))
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(lp_ref), atol=1e-5)
+    assert int(tok[0]) == 11                       # first of the tied maxima
+
+
+def test_fused_epilogue_kernel_matches_oracle():
+    """The Pallas streaming kernel (interpret mode on CPU) == the oracle,
+    across block sizes incl. non-dividing ones (single-block fallback)."""
+    from repro.kernels.sampling.kernel import greedy_epilogue_fwd
+    from repro.kernels.sampling.ref import greedy_epilogue_ref
+    logits = jax.random.normal(jax.random.key(4), (3, 1000)) * 4.0
+    tok_ref, lp_ref = greedy_epilogue_ref(logits)
+    for bv in (1000, 250, 128, 4096):
+        tok, lp = greedy_epilogue_fwd(logits, block_v=bv, interpret=True)
+        np.testing.assert_array_equal(np.asarray(tok), np.asarray(tok_ref))
+        np.testing.assert_allclose(np.asarray(lp), np.asarray(lp_ref),
+                                   atol=1e-5)
+
+
+def _mixed_requests(cfg, n=10, seed=11):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab,
+                                        int(rng.integers(4, 30))).astype(np.int32),
+                    max_new_tokens=int(rng.integers(1, 12)))
+            for i in range(n)]
+
+
+def test_kstep_loop_equals_single_steps(smol):
+    """Acceptance: draining at K=8 sync cadence emits exactly the tokens
+    (and the same scores) as stepping one token at a time."""
+    cfg, m, params = smol
+    outs = {}
+    for k in (1, 8):
+        eng = ServingEngine(m, params, ServeConfig(max_batch=4, max_len=64,
+                                                   decode_steps=8))
+        for r in _mixed_requests(cfg):
+            eng.submit(r)
+        while eng.queue or eng.active:
+            eng.step(decode_steps=k)
+        assert len(eng.completed) == 10
+        eng.kv.check_invariants()
+        assert eng.kv.n_free == eng.kv.num_pages - 1
+        outs[k] = {r.rid: (list(r.output), r.score) for r in eng.completed}
+    assert {r: o for r, (o, _) in outs[1].items()} == \
+           {r: o for r, (o, _) in outs[8].items()}
+    for rid in outs[1]:
+        np.testing.assert_allclose(outs[1][rid][1], outs[8][rid][1],
+                                   atol=1e-4)
+
+
+def test_kstep_midscan_eos_finish(smol):
+    """A row that emits eos in the middle of a K-burst parks on device:
+    later loop iterations emit nothing for it, its pre-allocated pages come
+    back on release, and its output stops at the eos token."""
+    cfg, m, params = smol
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, cfg.vocab, 9).astype(np.int32)
+    probe = Request(rid=0, prompt=prompt.copy(), max_new_tokens=7)
+    eng = ServingEngine(m, params, ServeConfig(max_batch=2, max_len=64))
+    eng.submit(probe)
+    eng.run_until_drained()
+    assert len(probe.output) == 7
+    eos = probe.output[2]                          # fires mid-burst (K=8)
+    eng2 = ServingEngine(m, params,
+                         ServeConfig(max_batch=2, max_len=64, eos_token=eos,
+                                     decode_steps=8))
+    replay = Request(rid=1, prompt=prompt.copy(), max_new_tokens=7)
+    eng2.submit(replay)
+    eng2.run_until_drained()
+    assert replay.output == probe.output[:3]       # stopped at the eos token
+    assert replay.done_s is not None
+    assert not eng2.active and not eng2.queue
+    assert eng2.kv.n_free == eng2.kv.num_pages - 1
+    eng2.kv.check_invariants()
+
+
+def test_kburst_crosses_page_boundaries(smol):
+    """One K-burst writing across page boundaries relies on span
+    pre-allocation -- the device loop must never need a host-side append."""
+    cfg, m, params = smol
+    eng = ServingEngine(m, params,
+                        ServeConfig(max_batch=2, max_len=64, page_size=16,
+                                    decode_steps=8))
+    rng = np.random.default_rng(6)
+    req = Request(rid=0, prompt=rng.integers(0, cfg.vocab, 14).astype(np.int32),
+                  max_new_tokens=12)               # writes cross pos 16 and 24
+    eng.submit(req)
+    eng.run_until_drained()
+    assert len(req.output) == 12
+    eng.kv.check_invariants()
+    assert eng.kv.n_free == eng.kv.num_pages - 1
+
+
+def test_empty_active_decode_guard(smol):
+    """Regression: decoding with an empty active set used to hit
+    np.log2(0); both paths must return (0 served, 0 iters) untouched."""
+    cfg, m, params = smol
+    eng = ServingEngine(m, params, ServeConfig(max_batch=2, max_len=32))
+    assert eng._decode_active_paged(now=0.0) == (0, 0)
+    dense = ServingEngine(m, params,
+                          ServeConfig(max_batch=2, max_len=32, paged=False))
+    assert dense._decode_all_dense(now=0.0) == (0, 0)
+    assert eng.step(now=0.0) == 0                  # no queue, no active: noop
+    assert eng.step_count == 0
+    with pytest.raises(ValueError):
+        eng.step(now=0.0, decode_steps=eng.decode_steps + 1)  # buffer bound
+
+
+def test_batched_prefill_coalesces_same_bucket(smol):
+    """Four same-bucket prompts arrive together: ONE batched prefill call
+    fills all four slots (one jit trace, full occupancy)."""
+    cfg, m, params = smol
+    eng = ServingEngine(m, params, ServeConfig(max_batch=4, max_len=64))
+    rng = np.random.default_rng(7)
+    for i in range(4):
+        eng.submit(Request(rid=i,
+                           prompt=rng.integers(0, cfg.vocab, 10).astype(np.int32),
+                           max_new_tokens=3))
+    eng.step(now=0.0)
+    assert len(eng.active) == 4
+    assert eng.prefill_trace_count == 1
+    assert eng._prefill_width == 4                 # one width-4 dispatch
+    assert eng.prefill_occupancy == 1.0
+    eng.run_until_drained()
+    assert len(eng.completed) == 4
+    # partial refill: occupancy drops below 1 but work still lands
+    eng.submit(Request(rid=9,
+                       prompt=rng.integers(0, cfg.vocab, 10).astype(np.int32),
+                       max_new_tokens=2))
+    eng.run_until_drained()
+    assert len(eng.completed) == 5
+    assert eng.prefill_trace_count == 1            # same bucket, same trace
+    assert 0.0 < eng.prefill_occupancy < 1.0
+
+
+def test_batched_prefill_mixed_buckets_split_groups(smol):
+    """A bucket change at the queue head closes the group: two buckets ->
+    two prefill calls, two traces, everything still greedy-exact."""
+    cfg, m, params = smol
+    eng = ServingEngine(m, params, ServeConfig(max_batch=4, max_len=64))
+    rng = np.random.default_rng(8)
+    prompts = [rng.integers(0, cfg.vocab, n).astype(np.int32)
+               for n in (8, 12, 20, 28)]           # buckets 16, 16, 32, 32
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=4))
+    eng.step(now=0.0)
+    assert len(eng.active) == 4
+    assert eng.prefill_trace_count == 2
+    eng.run_until_drained()
+    for i, p in enumerate(prompts):
+        req = next(r for r in eng.completed if r.rid == i)
+        toks = list(p)
+        ref = []
+        for _ in range(4):
+            logits, _ = m.forward(params,
+                                  {"tokens": jnp.asarray(toks, jnp.int32)[None]})
+            t = int(jnp.argmax(logits[0, -1]))
+            ref.append(t)
+            toks.append(t)
+        assert req.output == ref

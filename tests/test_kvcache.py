@@ -57,6 +57,48 @@ def test_write_prefill_pages_scatter_and_trash_overhang():
     np.testing.assert_array_equal(np.asarray(out[:, 1]), 0.0)
 
 
+def test_write_prefill_pages_batched_rows():
+    """Batched prefill scatters each row's chunks into its own pages; all
+    rows' overhang shares the trash page."""
+    ps, P, L, B = 4, 8, 2, 3
+    rest = (2, 3)
+    pages = {"k": jnp.zeros((L, P, ps) + rest)}
+    pb = 2 * ps
+    cache = {"k": jnp.asarray(
+        np.random.default_rng(2).normal(size=(L, B, pb) + rest), jnp.float32)}
+    page_ids = jnp.asarray(np.array(
+        [[5, 3], [1, TRASH_PAGE], [6, 2]], np.int32))
+    out = write_prefill_pages(pages, cache, page_ids)["k"]
+    for b, ids in enumerate([(5, 3), (1,), (6, 2)]):
+        for c, pid in enumerate(ids):
+            np.testing.assert_array_equal(
+                np.asarray(out[:, pid]),
+                np.asarray(cache["k"][:, b, c * ps:(c + 1) * ps]))
+    np.testing.assert_array_equal(np.asarray(out[:, 7]), 0.0)  # untouched
+
+
+def test_ensure_writable_span_preallocates_pages():
+    """The device-resident decode loop's contract: every page the next K
+    on-device writes may touch is allocated before the loop launches."""
+    kv = _pool()
+    kv.alloc_prefill(0, 10, 60, n_chunks=1)        # holds 1, reserves 4
+    assert kv.held[0] == 1
+    # K=8 burst from pos 10: writes 10..17, crossing into page 1
+    kv.ensure_writable_span(0, 10, 8)
+    assert kv.held[0] == 2
+    kv.check_invariants()
+    # K=8 burst from pos 30: crosses two boundaries at once (30..37)
+    kv.ensure_writable_span(0, 30, 8)
+    assert kv.held[0] == 3
+    kv.check_invariants()
+    # early-finished rows free their pre-allocated tail intact
+    kv.release(0)
+    kv.check_invariants()
+    assert kv.n_free == kv.num_pages - 1
+    with pytest.raises(RuntimeError):
+        kv.ensure_writable_span(1, 0, 65)          # span past slot capacity
+
+
 def test_pool_lifecycle_and_invariants():
     kv = _pool()
     assert kv.num_pages == 4 * 4 + 1               # all slots full + trash
