@@ -1,0 +1,155 @@
+"""Convergence-plane fault drill (ROADMAP convergence item).
+
+The same bursty replica workload runs twice per fault scenario on the elastic
+backend: once under the legacy imperative controller (policy deltas actuated
+directly) and once with ``convergence=True`` (the policy's votes folded into a
+desired state that the :class:`repro.core.convergence.Converger` reconciles
+every step).  Seeded faults are injected through the shared
+:class:`~repro.core.scaling.CapacityPlan`:
+
+* **unit-loss** -- replicas are killed mid-burst; the imperative controller
+  only notices through utilization (one adapt period + provision delay
+  later), the converger relaunches on the very next step.
+* **stuck-build** -- provisioning requests hang; imperatively they clog the
+  pool's headroom forever, the converger times them out, cancels, backs off
+  and retries.
+
+The drill asserts the converger's SLA violation rate is *strictly* lower in
+both scenarios, that the fault-free run is bit-for-bit identical between the
+two modes, and that replaying the convergence audit log reproduces the final
+per-pool fleet state.  Emitted as ``benchmarks/artifacts/convergence_faults.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import Rows, banner
+from repro.core.autoscaler import Policy, ThresholdPolicy
+from repro.core.autoscaler.base import Decision
+from repro.core.convergence import ConvergerConfig, FaultSpec, replay
+from repro.core.elastic import ClusterConfig, ElasticCluster
+from repro.core.scaling import UnitPool
+
+ARTIFACT = os.path.join(os.path.dirname(__file__), "artifacts",
+                        "convergence_faults.json")
+
+#: fault windows sized to land inside the workload's two bursts (400 s, 800 s)
+LOSS = (FaultSpec(loss_rate=1 / 40.0, start_s=380.0, end_s=900.0, seed=13),)
+STUCK = (FaultSpec(stuck_p=0.9, start_s=350.0, end_s=900.0, seed=13),)
+
+CONVERGE = ConvergerConfig(build_timeout_s=75.0, backoff_base_s=10.0,
+                           backoff_max_s=60.0, max_retries=10)
+
+#: the ceiling makes stuck builds *bite* imperatively -- clogged pending
+#: exhausts the pool's headroom, so further scale-up requests are clamped to
+#: zero until something cancels them (which only the converger does)
+POOL = (UnitPool("replica", provision_delay_s=45.0, min_units=1,
+                 max_units=12),)
+
+
+class _RestartFloor(Policy):
+    """ThresholdPolicy plus the one affordance every real deployment has: if
+    the fleet is dead (no live, no pending) while work is queued, restart a
+    unit.  Utilization-only rules read a dead fleet as 0%-busy and would
+    otherwise never recover from total unit loss -- this keeps the imperative
+    baseline *live* (it still limps through every loss the slow way: notice
+    via utilization one adapt period later, then wait out the provision
+    delay) so the drill measures degradation rather than deadlock."""
+
+    name = "threshold+restart"
+
+    def __init__(self, inner: Policy):
+        self.inner = inner
+
+    def reset(self):
+        self.inner.reset()
+
+    def decide(self, obs):
+        if obs.n_units + obs.n_pending == 0 and obs.n_in_system > 0:
+            return Decision(1, "dead-fleet restart")
+        return self.inner.decide(obs)
+
+    def describe(self):
+        return self.inner.describe() + "+restart"
+
+
+def _run(n: int, *, faults=None, convergence: bool):
+    from benchmarks.elastic_serving import _workload
+    cfg = ClusterConfig(pools=POOL, faults=faults, convergence=convergence,
+                        converge=CONVERGE if convergence else None)
+    cluster = ElasticCluster(cfg, _RestartFloor(ThresholdPolicy(0.7)),
+                             _workload(n=n))
+    rep = cluster.run()
+    return rep, cluster.controller
+
+
+def _fingerprint(rep) -> tuple:
+    return (rep.violation_rate, rep.unit_seconds, rep.n_decisions_up,
+            rep.n_decisions_down, int(rep.units_t.sum()),
+            int(rep.units_t.max()))
+
+
+def run(quick: bool = False) -> Rows:
+    banner("Convergence plane under injected faults (elastic backend)")
+    rows = Rows("convergence_faults")
+    n = 2_000 if quick else 8_000
+
+    scenarios = {}
+    for name, faults in (("fault-free", None), ("unit-loss", LOSS),
+                         ("stuck-build", STUCK)):
+        imp, _ = _run(n, faults=faults, convergence=False)
+        conv, ctrl = _run(n, faults=faults, convergence=True)
+        scenarios[name] = (imp, conv)
+        for mode, rep in (("imperative", imp), ("converger", conv)):
+            rows.add(f"{name}.{mode}.viol_pct", 100.0 * rep.violation_rate)
+            rows.add(f"{name}.{mode}.unit_seconds", rep.unit_seconds)
+        # the audit log is a faithful account: replaying it lands on the
+        # exact final per-pool fleet state
+        final = {p: {"live": s.units, "pending": s.pending}
+                 for p, s in ctrl.plan.stats().items()}
+        assert replay(ctrl.audit.records) == final, name
+        rows.add(f"{name}.audit_records", float(len(ctrl.audit.records)))
+        if faults is not None:
+            m = sum(ms.lost + ms.cancelled
+                    for ms in ctrl.plan.meters().values())
+            assert m > 0, f"{name}: no faults actually fired"
+            rows.add(f"{name}.faults_fired", float(m))
+
+    # fault-free: convergence mode is bit-for-bit the imperative controller
+    imp, conv = scenarios["fault-free"]
+    assert _fingerprint(imp) == _fingerprint(conv), "fault-free parity broke"
+    rows.add("fault-free.parity", 1.0, "fingerprints identical")
+
+    # under faults: the converger restores SLA, the baseline stays degraded
+    for name in ("unit-loss", "stuck-build"):
+        imp, conv = scenarios[name]
+        assert conv.violation_rate < imp.violation_rate, (
+            f"{name}: converger {conv.violation_rate:.4f} !< "
+            f"imperative {imp.violation_rate:.4f}")
+        rows.add(f"{name}.viol_pct_saved",
+                 100.0 * (imp.violation_rate - conv.violation_rate))
+
+    os.makedirs(os.path.dirname(ARTIFACT), exist_ok=True)
+    payload = {
+        "description": "imperative vs convergence control plane under seeded "
+                       "unit-loss and stuck-build faults (elastic backend, "
+                       "threshold70 policy)",
+        "n_requests": n,
+        "scenarios": {
+            name: {mode: {"violation_rate": rep.violation_rate,
+                          "unit_seconds": rep.unit_seconds,
+                          "p99_latency_s": rep.p99_latency_s,
+                          "max_units": rep.max_units}
+                   for mode, rep in (("imperative", imp_),
+                                     ("converger", conv_))}
+            for name, (imp_, conv_) in scenarios.items()},
+    }
+    with open(ARTIFACT, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    rows.add("artifact_scenarios", float(len(scenarios)), ARTIFACT)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

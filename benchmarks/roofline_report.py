@@ -15,7 +15,7 @@ import json
 import sys
 
 from repro.configs import ARCHS, SHAPES, get_config
-from repro.distributed.hlo_analysis import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.distributed.hlo_analysis import HBM_BW, PEAK_FLOPS_BF16
 
 
 def model_flops_per_device(arch: str, shape: str, n_dev: int, mesh_kind: str) -> float:

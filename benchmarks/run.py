@@ -20,6 +20,7 @@ MODULES = [
     "elastic_serving",
     "serving_engine",
     "policy_table",
+    "convergence_faults",
     "kernels_bench",
 ]
 
@@ -30,7 +31,7 @@ MODULES = [
 #: check.sh additionally runs serving_engine (which writes BENCH_serving.json
 #: and enforces the tokens/s floor vs the pre-device-resident baseline)
 SMOKE_MODULES = ["littles_law", "fig8_appdata", "elastic_serving",
-                 "policy_table"]
+                 "policy_table", "convergence_faults"]
 
 
 def main() -> None:

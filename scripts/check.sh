@@ -7,6 +7,14 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+echo "== lint: ruff (errors + unused imports; see ruff.toml) =="
+if command -v ruff >/dev/null 2>&1; then
+  ruff check src tests benchmarks
+else
+  echo "ruff not installed; skipping (CI installs it via requirements.txt)"
+fi
+
+echo
 echo "== tier-1: pytest =="
 python -m pytest -x -q
 

@@ -20,7 +20,6 @@ import tempfile
 import threading
 
 import jax
-import jax.numpy as jnp
 import ml_dtypes
 import numpy as np
 

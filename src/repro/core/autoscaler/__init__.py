@@ -6,10 +6,11 @@ from repro.core.autoscaler.policies import (
     ScheduledPolicy,
     TargetTrackingPolicy,
     ThresholdPolicy,
+    WebhookPolicy,
 )
 
 __all__ = [
     "CompositePolicy", "Decision", "Observation", "Policy",
     "AppDataPolicy", "CheapestFirstRouter", "LoadPolicy", "ScheduledPolicy",
-    "TargetTrackingPolicy", "ThresholdPolicy",
+    "TargetTrackingPolicy", "ThresholdPolicy", "WebhookPolicy",
 ]

@@ -313,6 +313,63 @@ class ScheduledPolicy(Policy):
         return f"scheduled({len(self.schedule)} windows)"
 
 
+class WebhookPolicy(Policy):
+    """Event-triggered capacity floors: ``fire(name, now)`` arms a named
+    trigger whose floor holds for its ``hold_s`` window (an external alert --
+    a breaking-news detector, a deploy hook -- asking for capacity *now*).
+
+    The imperative-mode counterpart of a scaling group's webhook
+    desired-state changes (see :mod:`repro.core.convergence.groups`); an
+    optional ``schedule`` folds :class:`ScheduledPolicy`-style windows into
+    the same floor, so ``ScalingGroup.as_policy()`` can express both.
+    Outside active holds it stays silent, composing with reactive policies in
+    a :class:`CompositePolicy`.
+    """
+
+    name = "webhook"
+
+    def __init__(self, triggers: dict[str, tuple[int, float]], *,
+                 schedule: tuple[tuple[float, float, int], ...] = (),
+                 lead_s: float = 0.0):
+        """``triggers``: name -> (min_units, hold_s); ``schedule``: optional
+        (start_s, end_s, min_units) windows active without any firing."""
+        self.triggers = dict(triggers)
+        self.schedule = ScheduledPolicy(list(schedule), lead_s=lead_s) \
+            if schedule else None
+        self._fired: list[tuple[float, int, float]] = []  # (t0, units, hold_s)
+
+    def reset(self) -> None:
+        self._fired = []
+        if self.schedule is not None:
+            self.schedule.reset()
+
+    def fire(self, name: str, now: float) -> None:
+        if name not in self.triggers:
+            raise ValueError(f"unknown webhook {name!r}; registered: "
+                             f"{sorted(self.triggers)}")
+        units, hold_s = self.triggers[name]
+        self._fired.append((float(now), int(units), float(hold_s)))
+
+    def _floor(self, t: float) -> int:
+        floor = 0
+        for t0, units, hold_s in self._fired:
+            if t0 <= t < t0 + hold_s:
+                floor = max(floor, units)
+        if self.schedule is not None:
+            floor = max(floor, self.schedule._floor(t))
+        return floor
+
+    def decide(self, obs: Observation) -> Decision:
+        floor = self._floor(obs.time)
+        have = obs.n_units + obs.n_pending
+        if have < floor:
+            return Decision(floor - have, f"webhook floor {floor}")
+        return Decision()
+
+    def describe(self) -> str:
+        return f"webhook({len(self.triggers)} triggers)"
+
+
 # -- registry: name -> factory, so launchers/benchmarks can name policies ------------
 def _scheduled_factory(**kw):
     if "schedule" not in kw:
@@ -326,4 +383,12 @@ register_policy("load",
                 lambda **kw: LoadPolicy(kw.pop("service_model", ServiceModel()), **kw))
 register_policy("appdata", AppDataPolicy)
 register_policy("target", TargetTrackingPolicy)
+def _webhook_factory(**kw):
+    if "triggers" not in kw:
+        raise ValueError(
+            "policy 'webhook' needs triggers={name: (min_units, hold_s), ...}")
+    return WebhookPolicy(kw.pop("triggers"), **kw)
+
+
 register_policy("scheduled", _scheduled_factory)
+register_policy("webhook", _webhook_factory)

@@ -1,0 +1,99 @@
+"""Append-only structured audit log for the convergence plane.
+
+Every state transition the converger either caused (steps) or witnessed
+(landings, revocations, injected faults) becomes one flat JSON record, so an
+operator -- or a test -- can reconstruct *why* the fleet looks the way it
+does.  Record kinds:
+
+* ``init``     -- starting live units per pool
+* ``desired``  -- a new desired state was set (per-pool targets + reason)
+* ``events``   -- witnessed meter deltas since the last converge call:
+  ``landed`` / ``revoked`` / ``lost`` / ``overflow_landed`` per pool
+* ``plan``     -- the steps the planner emitted this tick
+* ``step``     -- one executed step and its outcome (kind, pool, asked,
+  applied, plus ``queued`` for replacements)
+* ``backoff`` / ``gave_up`` -- retry bookkeeping on stuck pools
+* ``decision`` -- the policy decision that produced a desired change
+
+:func:`replay` folds the records back into per-pool ``{live, pending}``
+state; tests and the fault benchmark assert it matches the actual final
+``CapacityPlan`` state, which proves the log is a complete account of every
+capacity transition.
+"""
+from __future__ import annotations
+
+import json
+from typing import IO, Iterable, Mapping
+
+
+class AuditLog:
+    """In-memory audit trail, optionally mirrored to an append-only JSONL file."""
+
+    def __init__(self, path: str | None = None):
+        self.path = path
+        self._records: list[dict] = []
+        self._fh: IO[str] | None = open(path, "a") if path else None
+
+    @property
+    def records(self) -> list[dict]:
+        return self._records
+
+    def append(self, time: float, kind: str, **payload) -> dict:
+        rec = {"t": float(time), "kind": str(kind), **payload}
+        self._records.append(rec)
+        if self._fh is not None:
+            self._fh.write(json.dumps(rec, sort_keys=True) + "\n")
+            self._fh.flush()
+        return rec
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+    @staticmethod
+    def load(path: str) -> list[dict]:
+        with open(path) as fh:
+            return [json.loads(line) for line in fh if line.strip()]
+
+
+def replay(records: Iterable[Mapping]) -> dict[str, dict[str, int]]:
+    """Fold audit records into final per-pool ``{"live": n, "pending": n}``.
+
+    Only capacity-bearing kinds move state (``init`` / ``events`` / ``step``);
+    everything else is narrative.  The result must equal the plan's actual
+    final state -- see ``tests/test_convergence.py`` and the fault benchmark.
+    """
+    state: dict[str, dict[str, int]] = {}
+
+    def pool(name: str) -> dict[str, int]:
+        return state.setdefault(name, {"live": 0, "pending": 0})
+
+    for rec in records:
+        kind = rec["kind"]
+        if kind == "init":
+            for name, live in rec["pools"].items():
+                state[name] = {"live": int(live), "pending": 0}
+        elif kind == "events":
+            p = pool(rec["pool"])
+            landed = int(rec.get("landed", 0))
+            p["live"] += landed - int(rec.get("revoked", 0)) - int(
+                rec.get("lost", 0))
+            p["pending"] -= landed + int(rec.get("overflow_landed", 0))
+        elif kind == "step":
+            p = pool(rec["pool"])
+            step = rec["step"]
+            applied = int(rec.get("applied", 0))
+            if step == "LaunchUnit":
+                p["pending"] += applied
+            elif step == "CancelPending":
+                p["pending"] -= applied
+            elif step == "DrainUnit":
+                p["live"] -= applied
+            elif step == "ReplaceUnhealthy":
+                p["live"] -= applied
+                p["pending"] += int(rec.get("queued", 0))
+    return state
+
+
+__all__ = ["AuditLog", "replay"]

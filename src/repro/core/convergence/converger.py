@@ -1,0 +1,205 @@
+"""The converger loop: reconcile observed capacity toward the desired state.
+
+Runs once per controller step (not just per adapt tick), so healing starts
+the step after a fault is observable.  Each call:
+
+1. audits witnessed meter deltas since the last call (landings, revocations,
+   losses) so the audit log stays a complete account;
+2. observes ``plan.stats()`` and queries the build-status API for overdue
+   builds (pending whose expected landing is more than ``build_timeout_s``
+   ago -- the observable symptom of a stuck build);
+3. asks the pure planner for steps, withholding launches from pools that are
+   in retry backoff or have exhausted their retry budget, and replacements
+   from pools inside the flap-damping window;
+4. executes the steps against the capacity plane, recording per-step
+   outcomes.
+
+Retry discipline: cancelling a stuck build counts as a failed launch
+attempt; the relaunch waits ``backoff_base_s * 2**(attempt-1)`` (capped at
+``backoff_max_s``).  A landing in the pool resets the attempt counter; after
+``max_retries`` failed attempts the pool is parked (audited as ``gave_up``)
+until the policy next changes its target.  Partial failures need no special
+handling -- an under-applied step is just diff the next call re-plans.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core.scaling.capacity import CapacityPlan
+
+from .audit import AuditLog
+from .desired import DesiredGroup
+from .planner import (
+    CancelPending, DrainUnit, LaunchUnit, ReplaceUnhealthy, Step, plan_steps,
+)
+
+
+@dataclass(frozen=True)
+class ConvergerConfig:
+    """Timeout / retry / backoff knobs for the converger loop."""
+
+    build_timeout_s: float = 30.0    # pending overdue by this much => stuck
+    max_retries: int = 5             # failed launch attempts before parking
+    backoff_base_s: float = 5.0      # first retry delay; doubles per attempt
+    backoff_max_s: float = 120.0
+    replace_backoff_s: float = 30.0  # min gap between replacements per pool
+
+    def __post_init__(self):
+        if self.build_timeout_s < 0.0:
+            raise ValueError(f"build_timeout_s must be >= 0, got "
+                             f"{self.build_timeout_s}")
+        if self.max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got "
+                             f"{self.max_retries}")
+        if self.backoff_base_s <= 0.0 or self.backoff_max_s < self.backoff_base_s:
+            raise ValueError(f"need 0 < backoff_base_s <= backoff_max_s, got "
+                             f"[{self.backoff_base_s}, {self.backoff_max_s}]")
+
+    def backoff_s(self, attempt: int) -> float:
+        return min(self.backoff_base_s * 2.0 ** max(attempt - 1, 0),
+                   self.backoff_max_s)
+
+
+@dataclass(frozen=True)
+class StepOutcome:
+    """One executed step: ``applied`` units actuated of ``step.count`` asked;
+    ``queued`` is the replacement count for ReplaceUnhealthy steps."""
+
+    time: float
+    step: Step
+    applied: int
+    queued: int = 0
+
+    @property
+    def ok(self) -> bool:
+        return self.applied >= self.step.count
+
+
+class Converger:
+    """Executes convergence steps against a :class:`CapacityPlan`."""
+
+    def __init__(self, plan: CapacityPlan, cfg: ConvergerConfig | None = None,
+                 audit: AuditLog | None = None):
+        self.plan = plan
+        self.cfg = cfg or ConvergerConfig()
+        self.audit = audit
+        self.desired: DesiredGroup | None = None
+        self._attempts: dict[str, int] = {}     # failed launch attempts
+        self._gate: dict[str, float] = {}       # no launches before this time
+        self._replace_gate: dict[str, float] = {}
+        self._last_meters = plan.meters()
+
+    # -- desired state ----------------------------------------------------------
+    def set_desired(self, desired: DesiredGroup, now: float,
+                    reason: str = "") -> None:
+        if self.desired is not None:
+            for name in desired.targets:
+                if desired.target_of(name) != self.desired.target_of(name):
+                    # new intent un-parks the pool and restarts its budget
+                    self._attempts.pop(name, None)
+                    self._gate.pop(name, None)
+        changed = (self.desired is None
+                   or any(desired.target_of(n) != self.desired.target_of(n)
+                          for n in desired.targets))
+        self.desired = desired
+        if self.audit is not None and changed:
+            self.audit.append(now, "desired", reason=reason,
+                              targets={n: t.target
+                                       for n, t in desired.targets.items()})
+
+    # -- the loop ---------------------------------------------------------------
+    def converge(self, now: float) -> list[StepOutcome]:
+        if self.desired is None:
+            return []
+        prev_meters = self._last_meters
+        self._audit_events(now)
+        # a landing proves the build path works again: reset retry budgets
+        for name in list(self._attempts):
+            last = prev_meters.get(name)
+            cur = self._last_meters.get(name)
+            if last is not None and cur is not None and cur.landed > last.landed:
+                self._attempts.pop(name, None)
+                self._gate.pop(name, None)
+        stats = self.plan.stats()
+        overdue: dict[str, int] = {}
+        for name in stats:
+            od = self.plan.overdue_pending(name, now, self.cfg.build_timeout_s)
+            if od > 0:
+                overdue[name] = od
+                self._note_failed_attempt(name, now)
+        blocked = set()
+        for name in stats:
+            attempts = self._attempts.get(name, 0)
+            if attempts > self.cfg.max_retries:
+                blocked.add(name)
+            elif now < self._gate.get(name, -1.0):
+                blocked.add(name)
+        replace_blocked = {name for name, until in self._replace_gate.items()
+                           if now < until}
+        steps = plan_steps(self.desired, stats, overdue=overdue,
+                           launch_blocked=blocked,
+                           replace_blocked=replace_blocked)
+        if steps and self.audit is not None:
+            self.audit.append(now, "plan", steps=[
+                {"step": type(s).__name__, "pool": s.pool, "count": s.count}
+                for s in steps])
+        return [self._execute(s, now) for s in steps]
+
+    # -- internals --------------------------------------------------------------
+    def _execute(self, step: Step, now: float) -> StepOutcome:
+        queued = 0
+        if isinstance(step, LaunchUnit):
+            applied = self.plan.request(step.pool, step.count, now)
+        elif isinstance(step, CancelPending):
+            applied = self.plan.cancel_pending(step.pool, step.count)
+        elif isinstance(step, DrainUnit):
+            applied = self.plan.drain(step.pool, step.count)
+        elif isinstance(step, ReplaceUnhealthy):
+            applied, queued = self.plan.replace_unhealthy(
+                step.pool, step.count, now)
+            self._replace_gate[step.pool] = now + self.cfg.replace_backoff_s
+        else:  # pragma: no cover - the planner only emits the four kinds
+            raise TypeError(f"unknown step {step!r}")
+        out = StepOutcome(time=now, step=step, applied=applied, queued=queued)
+        if self.audit is not None:
+            rec = {"step": type(step).__name__, "pool": step.pool,
+                   "asked": step.count, "applied": applied}
+            if isinstance(step, CancelPending):
+                rec["reason"] = step.reason
+            if isinstance(step, ReplaceUnhealthy):
+                rec["queued"] = queued
+            self.audit.append(now, "step", **rec)
+        return out
+
+    def _note_failed_attempt(self, name: str, now: float) -> None:
+        attempts = self._attempts.get(name, 0) + 1
+        self._attempts[name] = attempts
+        if attempts > self.cfg.max_retries:
+            if self.audit is not None:
+                self.audit.append(now, "gave_up", pool=name, attempts=attempts)
+            return
+        delay = self.cfg.backoff_s(attempts)
+        self._gate[name] = now + delay
+        if self.audit is not None:
+            self.audit.append(now, "backoff", pool=name, attempts=attempts,
+                              until=now + delay)
+
+    def _audit_events(self, now: float) -> None:
+        meters = self.plan.meters()
+        if self.audit is not None:
+            for name, m in meters.items():
+                last = self._last_meters.get(name)
+                if last is None:
+                    continue
+                deltas = {
+                    "landed": m.landed - last.landed,
+                    "revoked": m.revoked - last.revoked,
+                    "lost": m.lost - last.lost,
+                    "overflow_landed": m.overflow_landed - last.overflow_landed,
+                }
+                if any(deltas.values()):
+                    self.audit.append(now, "events", pool=name, **deltas)
+        self._last_meters = meters
+
+
+__all__ = ["Converger", "ConvergerConfig", "StepOutcome"]

@@ -1,0 +1,109 @@
+"""Seeded fault-injection processes threaded through the capacity plane.
+
+Three fault kinds, matching the failure taxonomy the ROADMAP's convergence
+item names (the scenarios an imperative delta controller cannot express):
+
+* **unit loss** -- live units vanish abruptly (hardware failure, AZ event):
+  each live unit is lost within a step with probability
+  ``1 - exp(-loss_rate * step_s)``.
+* **stuck builds** -- a queued allocation never lands (hung image build,
+  exhausted capacity pool behind the API): each unit of a request sticks
+  with probability ``stuck_p``.  Stuck builds occupy pending capacity -- and
+  ceiling headroom -- until something cancels them, which is exactly what
+  clogs the imperative baseline.
+* **flapping health** -- live units oscillate between healthy and unhealthy
+  with hazards ``flap_rate`` / ``heal_rate``.
+
+Each :class:`FaultSpec` is windowed (``start_s``..``end_s``) and carries its
+own seed; the injector keeps one RNG stream per (spec, fault-kind) so the
+unit-loss process a run experiences does not depend on how many requests the
+controller happened to issue.  ``CapacityPlan`` holds the injector behind a
+duck-typed attach point (``stuck_builds`` / ``step_draws`` / ``reset``), so
+the scaling package never imports this module.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    """One windowed, seeded fault process; ``pool=None`` hits every pool."""
+
+    pool: str | None = None
+    loss_rate: float = 0.0       # per-unit hazard of abrupt unit loss, 1/s
+    stuck_p: float = 0.0         # probability a queued build never lands
+    flap_rate: float = 0.0       # per-unit hazard healthy -> unhealthy, 1/s
+    heal_rate: float = 0.0       # per-unit hazard unhealthy -> healthy, 1/s
+    start_s: float = 0.0
+    end_s: float = math.inf
+    seed: int = 0
+
+    def __post_init__(self):
+        for f in ("loss_rate", "flap_rate", "heal_rate"):
+            if getattr(self, f) < 0.0:
+                raise ValueError(f"{f} must be >= 0, got {getattr(self, f)}")
+        if not 0.0 <= self.stuck_p <= 1.0:
+            raise ValueError(f"stuck_p must be in [0, 1], got {self.stuck_p}")
+        if self.end_s < self.start_s:
+            raise ValueError(f"end_s {self.end_s} < start_s {self.start_s}")
+
+    def active(self, pool: str, now: float) -> bool:
+        return ((self.pool is None or self.pool == pool)
+                and self.start_s <= now < self.end_s)
+
+
+class FaultInjector:
+    """Seeded draws for a set of :class:`FaultSpec` processes.
+
+    Deterministic given the specs' seeds and the sequence of calls; streams
+    are split per fault kind so loss draws stay aligned between runs whose
+    request patterns differ (e.g. imperative vs convergence mode).
+    """
+
+    def __init__(self, specs):
+        self.specs = tuple(specs)
+        self._rngs: list[dict[str, np.random.Generator]] = []
+        self.reset()
+
+    def reset(self) -> None:
+        self._rngs = [
+            {kind: np.random.default_rng((spec.seed, i))
+             for i, kind in enumerate(("loss", "stuck", "flap", "heal"))}
+            for spec in self.specs
+        ]
+
+    def stuck_builds(self, pool: str, count: int, now: float) -> int:
+        """How many of ``count`` units just queued for ``pool`` will stick."""
+        stuck = 0
+        for spec, rngs in zip(self.specs, self._rngs):
+            if spec.stuck_p > 0.0 and spec.active(pool, now):
+                stuck += int(rngs["stuck"].binomial(count - stuck, spec.stuck_p))
+                if stuck >= count:
+                    return count
+        return stuck
+
+    def step_draws(self, pool: str, live: int, unhealthy: int, now: float,
+                   step_s: float) -> tuple[int, int, int]:
+        """Per-step fault draws for ``pool``: (lost, flapped, healed)."""
+        lost = flapped = healed = 0
+        for spec, rngs in zip(self.specs, self._rngs):
+            if not spec.active(pool, now):
+                continue
+            if spec.loss_rate > 0.0 and live - lost > 0:
+                p = -math.expm1(-spec.loss_rate * step_s)
+                lost += int(rngs["loss"].binomial(live - lost, p))
+            healthy = max(live - lost - unhealthy, 0)
+            if spec.flap_rate > 0.0 and healthy - flapped > 0:
+                p = -math.expm1(-spec.flap_rate * step_s)
+                flapped += int(rngs["flap"].binomial(healthy - flapped, p))
+            if spec.heal_rate > 0.0 and unhealthy - healed > 0:
+                p = -math.expm1(-spec.heal_rate * step_s)
+                healed += int(rngs["heal"].binomial(unhealthy - healed, p))
+        return lost, flapped, healed
+
+
+__all__ = ["FaultInjector", "FaultSpec"]

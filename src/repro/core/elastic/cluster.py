@@ -39,10 +39,15 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
+from typing import TYPE_CHECKING
 
 import numpy as np
 
 from repro.core.autoscaler.base import Policy
+
+if TYPE_CHECKING:
+    from repro.core.convergence.converger import ConvergerConfig
+    from repro.core.convergence.faults import FaultSpec
 from repro.core.scaling import (
     ControllerConfig,
     RunReport,
@@ -96,6 +101,11 @@ class ClusterConfig:
     pools: tuple[UnitPool, ...] | None = None   # typed replica pools (None: one
                                                 # on-demand pool from the knobs above)
     sla: Sla | None = None                   # per-class deadlines (None: flat sla_s)
+    convergence: bool = False                # desired-state reconciliation
+                                             # (fault-free: bit-for-bit identical)
+    converge: "ConvergerConfig | None" = None    # converger timeout/retry knobs
+    faults: "tuple[FaultSpec, ...] | None" = None   # seeded fault injection
+    audit_path: str | None = None            # mirror the audit log to JSONL
 
 
 class _ClassModel:
@@ -225,10 +235,15 @@ class ElasticCluster:
                 app_window_s=cfg.app_window_s,
                 signal_channel=cfg.signal_channel,
                 pools=cfg.pools,
+                convergence=cfg.convergence,
+                converge=cfg.converge,
+                faults=cfg.faults,
+                audit_path=cfg.audit_path,
             ),
             bus,
             starting_units=cfg.starting_replicas,
         )
+        self.controller = ctrl      # post-run inspection (audit log, meters)
         n = len(self.incoming)
         arrival, work, score = self._arrival, self._work, self._score
 

@@ -18,7 +18,6 @@ import jax
 from jax.sharding import Mesh
 
 from repro.distributed.sharding import param_sharding
-from repro.launch.mesh import make_mesh
 
 
 def elastic_remesh_plan(n_devices: int, *, model_parallel: int) -> tuple[int, int]:

@@ -28,7 +28,7 @@ behavior), which is what keeps the golden parity tests bit-for-bit.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Iterator, Mapping, Sequence
 
 import numpy as np
@@ -82,11 +82,40 @@ class PoolStats:
     max_units: int = 4096
     preemptible: bool = False
     revoked: int = 0                  # cumulative revocations so far
+    unhealthy: int = 0                # live units currently failing health checks
+    lost: int = 0                     # cumulative units lost to injected faults
+    overflow: int = 0                 # cumulative units refused by the ceiling
 
     @property
     def headroom(self) -> int:
         """Units this pool can still take (live + pending below the ceiling)."""
         return max(self.max_units - self.units - self.pending, 0)
+
+
+@dataclass
+class PoolMeters:
+    """Cumulative per-pool accounting, the plan's conservation ledger.
+
+    Two invariants hold under ANY interleaving of request/land/release/
+    cancel/drain and injected faults (pinned by the property tests):
+
+    * ``live  == starting + landed - released - revoked - lost``
+    * ``pending == queued - landed - cancelled - overflow_landed``
+    """
+
+    queued: int = 0            # units actually queued by request()
+    landed: int = 0            # pending units that became live
+    cancelled: int = 0         # pending units cancelled before landing
+    released: int = 0          # live units voluntarily released (incl. drains)
+    revoked: int = 0           # preemptible revocations
+    lost: int = 0              # injected unit-loss faults
+    overflow_request: int = 0  # units refused at request() (no ceiling headroom)
+    overflow_landed: int = 0   # units discarded at landing (ceiling clamp)
+
+    @property
+    def overflow(self) -> int:
+        """Total units the ceiling turned away, at either end of the queue."""
+        return self.overflow_request + self.overflow_landed
 
 
 @dataclass(frozen=True)
@@ -95,6 +124,17 @@ class RevocationEvent:
 
     time: float
     pool: str
+    count: int
+
+
+@dataclass(frozen=True)
+class FaultEvent:
+    """One injected-fault occurrence (``kind``: unit_loss / stuck_build /
+    flap / heal) of ``count`` units in ``pool`` at ``time``."""
+
+    time: float
+    pool: str
+    kind: str
     count: int
 
 
@@ -127,19 +167,54 @@ class Sla:
 class _PoolState:
     """Mutable runtime state of one pool inside a CapacityPlan."""
 
-    __slots__ = ("pool", "live", "pending", "unit_seconds", "revoked", "rng")
+    __slots__ = ("pool", "live", "pending", "stuck", "unhealthy",
+                 "unit_seconds", "meters", "rng")
 
     def __init__(self, pool: UnitPool, live: int):
         self.pool = pool
         self.live = int(live)
         self.pending: list[tuple[float, int]] = []   # (available_at, count)
+        # builds that will never land (injected stuck_build faults); they
+        # occupy pending capacity -- and ceiling headroom -- until cancelled
+        self.stuck: list[tuple[float, int]] = []     # (expected_at, count)
+        self.unhealthy = 0
         self.unit_seconds = 0.0
-        self.revoked = 0
+        self.meters = PoolMeters()
         self.rng = np.random.default_rng(pool.revoke_seed)
 
     @property
     def n_pending(self) -> int:
-        return sum(c for _, c in self.pending)
+        return (sum(c for _, c in self.pending)
+                + sum(c for _, c in self.stuck))
+
+    @property
+    def revoked(self) -> int:
+        return self.meters.revoked
+
+    def cancel(self, count: int) -> int:
+        """Cancel up to ``count`` pending builds: stuck ones first (they are
+        worthless, oldest first so the most-overdue go), then healthy pending
+        newest-first (same order release() always used)."""
+        left = int(count)
+        while left > 0 and self.stuck:
+            at, c = self.stuck[0]
+            take = min(c, left)
+            left -= take
+            if take == c:
+                self.stuck.pop(0)
+            else:
+                self.stuck[0] = (at, c - take)
+        while left > 0 and self.pending:
+            at, c = self.pending[-1]
+            take = min(c, left)
+            left -= take
+            if take == c:
+                self.pending.pop()
+            else:
+                self.pending[-1] = (at, c - take)
+        done = int(count) - left
+        self.meters.cancelled += done
+        return done
 
 
 class CapacityPlan:
@@ -150,7 +225,8 @@ class CapacityPlan:
     ``starting_units`` field says otherwise.
     """
 
-    def __init__(self, pools: Sequence[UnitPool], *, starting_units: int = 0):
+    def __init__(self, pools: Sequence[UnitPool], *, starting_units: int = 0,
+                 faults=None):
         pools = tuple(pools)
         if not pools:
             raise ValueError("CapacityPlan needs at least one UnitPool")
@@ -159,8 +235,13 @@ class CapacityPlan:
             raise ValueError(f"duplicate pool names: {names}")
         self.pools = pools
         self.default_pool = pools[0].name
+        # fault injector (see repro.core.convergence.faults) -- duck-typed so
+        # this module stays import-cycle free: needs .reset(), .stuck_builds()
+        # and .step_draws()
+        self._faults = faults
         self._state: dict[str, _PoolState] = {}
         self.revocations: list[RevocationEvent] = []
+        self.fault_events: list[FaultEvent] = []
         self.reset(starting_units)
 
     # -- lifecycle ------------------------------------------------------------------
@@ -171,6 +252,9 @@ class CapacityPlan:
                 starting_units if i == 0 else 0)
             self._state[p.name] = _PoolState(p, live)
         self.revocations = []
+        self.fault_events = []
+        if self._faults is not None:
+            self._faults.reset()
 
     # -- totals ---------------------------------------------------------------------
     @property
@@ -197,38 +281,86 @@ class CapacityPlan:
     # -- per-step protocol ----------------------------------------------------------
     def land(self, now: float, step_s: float = 1.0) -> int:
         """Start one step: land provisioned units whose delay elapsed (clamped
-        to the pool ceiling, excess discarded -- same semantics the scalar
-        controller had), apply revocations for preemptible pools, then meter
+        to the pool ceiling, excess counted in the ``overflow`` meter), apply
+        revocations for preemptible pools and any injected faults, then meter
         this step's unit-seconds.  Returns total usable units."""
         for st in self._state.values():
             if st.pending:
                 ready = sum(c for at, c in st.pending if at <= now)
                 if ready:
-                    st.live = min(st.live + ready, st.pool.max_units)
+                    admit = min(ready, max(st.pool.max_units - st.live, 0))
+                    if admit < ready:
+                        st.meters.overflow_landed += ready - admit
+                    st.live += admit
+                    st.meters.landed += admit
                     st.pending = [p for p in st.pending if p[0] > now]
             if st.pool.revoke_rate > 0.0 and st.live > 0:
                 p_rev = -math.expm1(-st.pool.revoke_rate * step_s)
                 k = int(st.rng.binomial(st.live, p_rev))
                 if k:
                     st.live -= k
-                    st.revoked += k
+                    st.meters.revoked += k
+                    st.unhealthy = min(st.unhealthy, st.live)
                     self.revocations.append(
                         RevocationEvent(time=now, pool=st.pool.name, count=k))
+            if self._faults is not None:
+                self._apply_faults(st, now, step_s)
             st.unit_seconds += st.live * step_s
         return self.total_live
 
+    def _apply_faults(self, st: _PoolState, now: float, step_s: float) -> None:
+        lost, flapped, healed = self._faults.step_draws(
+            st.pool.name, st.live, st.unhealthy, now, step_s)
+        if lost:
+            st.live -= lost
+            st.meters.lost += lost
+            st.unhealthy = min(st.unhealthy, st.live)
+            self.fault_events.append(
+                FaultEvent(time=now, pool=st.pool.name, kind="unit_loss",
+                           count=lost))
+        if flapped:
+            st.unhealthy = min(st.live, st.unhealthy + flapped)
+            self.fault_events.append(
+                FaultEvent(time=now, pool=st.pool.name, kind="flap",
+                           count=flapped))
+        if healed:
+            healed = min(healed, st.unhealthy)
+            if healed:
+                st.unhealthy -= healed
+                self.fault_events.append(
+                    FaultEvent(time=now, pool=st.pool.name, kind="heal",
+                               count=healed))
+
     # -- actuation ------------------------------------------------------------------
     def request(self, name: str, count: int, now: float) -> int:
-        """Queue ``count`` units of ``name`` behind its provisioning delay.
-        (Clamping to the pool ceiling happens at landing, as before.)"""
+        """Queue units of ``name`` behind its provisioning delay, clamped to
+        the pool's remaining ceiling headroom (``max_units - live - pending``);
+        refused units are counted in the ``overflow`` meter.  Returns the
+        count actually queued."""
         if count <= 0:
             return 0
         st = self._state.get(name)
         if st is None:
             raise ValueError(f"unknown pool {name!r}; plan pools: "
                              f"{[p.name for p in self.pools]}")
-        st.pending.append((now + st.pool.provision_delay_s, int(count)))
-        return int(count)
+        count = int(count)
+        queued = min(count, max(st.pool.max_units - st.live - st.n_pending, 0))
+        if queued < count:
+            st.meters.overflow_request += count - queued
+        if queued <= 0:
+            return 0
+        at = now + st.pool.provision_delay_s
+        stuck = (self._faults.stuck_builds(st.pool.name, queued, now)
+                 if self._faults is not None else 0)
+        if stuck:
+            st.stuck.append((at, stuck))
+            self.fault_events.append(
+                FaultEvent(time=now, pool=st.pool.name, kind="stuck_build",
+                           count=stuck))
+        if queued - stuck:
+            st.pending.append((at, queued - stuck))
+        st.meters.queued += queued
+        return queued
 
     def releasable(self) -> int:
         """Units a voluntary release could currently reclaim: all pending plus
@@ -250,22 +382,73 @@ class CapacityPlan:
                                       self.pools.index(s.pool)),
                        reverse=True)
         for st in order:                       # pass 1: cancel pending
-            while left > 0 and st.pending:
-                at, c = st.pending[-1]
-                take = min(c, left)
+            if left > 0 and (st.pending or st.stuck):
+                take = st.cancel(left)
                 left -= take
-                out[st.pool.name] = out.get(st.pool.name, 0) + take
-                if take == c:
-                    st.pending.pop()
-                else:
-                    st.pending[-1] = (at, c - take)
+                if take:
+                    out[st.pool.name] = out.get(st.pool.name, 0) + take
         for st in order:                       # pass 2: release live
             take = min(left, max(st.live - st.pool.min_units, 0))
             if take > 0:
                 st.live -= take
+                st.unhealthy = max(st.unhealthy - take, 0)   # drain sick first
+                st.meters.released += take
                 left -= take
                 out[st.pool.name] = out.get(st.pool.name, 0) + take
         return out
+
+    # -- convergence primitives -----------------------------------------------------
+    def cancel_pending(self, name: str, count: int) -> int:
+        """Cancel up to ``count`` pending builds of ``name`` (stuck builds
+        first, then healthy pending newest-first).  Returns the count
+        actually cancelled."""
+        if count <= 0:
+            return 0
+        return self._pool(name).cancel(count)
+
+    def drain(self, name: str, count: int) -> int:
+        """Voluntarily drain up to ``count`` live units of ``name``,
+        respecting the pool floor; unhealthy units go first.  Returns the
+        count actually drained."""
+        if count <= 0:
+            return 0
+        st = self._pool(name)
+        take = min(int(count), max(st.live - st.pool.min_units, 0))
+        if take > 0:
+            st.live -= take
+            st.unhealthy = max(st.unhealthy - take, 0)
+            st.meters.released += take
+        return take
+
+    def replace_unhealthy(self, name: str, count: int,
+                          now: float) -> tuple[int, int]:
+        """Tear down up to ``count`` unhealthy live units of ``name`` and
+        queue replacements behind the provisioning delay (the fleet briefly
+        dips, exactly as a real instance failure would).  Returns
+        ``(drained, queued)``."""
+        st = self._pool(name)
+        k = min(int(count), st.unhealthy)
+        if k <= 0:
+            return 0, 0
+        st.live -= k
+        st.unhealthy -= k
+        st.meters.released += k
+        queued = self.request(name, k, now)
+        return k, queued
+
+    def overdue_pending(self, name: str, now: float, timeout_s: float) -> int:
+        """Builds of ``name`` whose expected landing is more than
+        ``timeout_s`` overdue -- the observable symptom of a stuck build."""
+        st = self._pool(name)
+        return (sum(c for at, c in st.stuck if now >= at + timeout_s)
+                + sum(c for at, c in st.pending if now >= at + timeout_s))
+
+    def _pool(self, name: str) -> _PoolState:
+        st = self._state.get(name)
+        if st is None:
+            raise ValueError(f"unknown pool {name!r}; plan pools: "
+                             f"{[p.name for p in self.pools]}")
+        return st
 
     # -- observation / accounting ---------------------------------------------------
     def stats(self) -> dict[str, PoolStats]:
@@ -275,9 +458,16 @@ class CapacityPlan:
                             min_units=st.pool.min_units,
                             max_units=st.pool.max_units,
                             preemptible=st.pool.preemptible,
-                            revoked=st.revoked)
+                            revoked=st.revoked,
+                            unhealthy=st.unhealthy,
+                            lost=st.meters.lost,
+                            overflow=st.meters.overflow)
             for name, st in self._state.items()
         }
+
+    def meters(self) -> dict[str, PoolMeters]:
+        """Copies of the per-pool conservation ledgers (see PoolMeters)."""
+        return {name: replace(st.meters) for name, st in self._state.items()}
 
     def unit_seconds_by_pool(self) -> dict[str, float]:
         return {name: st.unit_seconds for name, st in self._state.items()}
@@ -296,5 +486,5 @@ class CapacityPlan:
         }
 
 
-__all__ = ["DEFAULT_POOL", "CapacityPlan", "PoolStats", "RevocationEvent",
-           "Sla", "UnitPool"]
+__all__ = ["DEFAULT_POOL", "CapacityPlan", "FaultEvent", "PoolMeters",
+           "PoolStats", "RevocationEvent", "Sla", "UnitPool"]

@@ -38,6 +38,10 @@ from repro.core.scaling.signals import DEFAULT_CHANNEL, SignalBus
 
 if TYPE_CHECKING:  # runtime import is deferred: autoscaler imports this package
     from repro.core.autoscaler.base import Decision, Observation, Policy
+    from repro.core.convergence.audit import AuditLog
+    from repro.core.convergence.converger import Converger, ConvergerConfig
+    from repro.core.convergence.faults import FaultSpec
+    from repro.core.convergence.groups import ScalingGroup
 
 
 @dataclass(frozen=True)
@@ -61,6 +65,15 @@ class ControllerConfig:
     signal_channel: str = DEFAULT_CHANNEL   # channel mirrored into the legacy
                                             # Observation.app_* fields
     pools: tuple[UnitPool, ...] | None = None
+    # -- convergence plane (see repro.core.convergence) -------------------------
+    convergence: bool = False        # reconcile toward desired state instead of
+                                     # actuating imperative deltas directly
+    converge: "ConvergerConfig | None" = None   # timeouts/retries/backoff knobs
+    faults: "tuple[FaultSpec, ...] | None" = None   # seeded fault injection,
+                                                    # threaded through the plan
+    group: "ScalingGroup | None" = None   # scaling-group pools + scheduled and
+                                          # webhook desired-state floors
+    audit_path: str | None = None    # mirror the audit log to a JSONL file
 
     def __post_init__(self):
         if self.step_s <= 0.0:
@@ -84,12 +97,19 @@ class ControllerConfig:
 
     def make_plan(self, starting_units: int) -> CapacityPlan:
         pools = self.pools
+        if pools is None and self.group is not None:
+            pools = self.group.pools
         if pools is None:
             pools = (UnitPool(DEFAULT_POOL,
                               provision_delay_s=self.provision_delay_s,
                               min_units=self.min_units,
                               max_units=self.max_units),)
-        return CapacityPlan(pools, starting_units=starting_units)
+        injector = None
+        if self.faults:
+            from repro.core.convergence.faults import FaultInjector
+            injector = FaultInjector(self.faults)
+        return CapacityPlan(pools, starting_units=starting_units,
+                            faults=injector)
 
 
 @dataclass(frozen=True)
@@ -134,6 +154,20 @@ class ScalingController:
         self._steps = 0
         self._win_busy: list[float] = []
         self._win_arrivals = 0
+        self.audit: AuditLog | None = None
+        self._converger: Converger | None = None
+        if self.cfg.convergence:
+            # deferred: repro.core.convergence imports this package
+            from repro.core.convergence.audit import AuditLog
+            from repro.core.convergence.converger import Converger
+            self.audit = AuditLog(self.cfg.audit_path)
+            self.audit.append(0.0, "init",
+                              pools={p.name: self.plan.live_of(p.name)
+                                     for p in self.plan.pools})
+            self._converger = Converger(self.plan, self.cfg.converge,
+                                        audit=self.audit)
+        if self.cfg.group is not None:
+            self.cfg.group.reset()
         self.policy.reset()
 
     @property
@@ -148,8 +182,17 @@ class ScalingController:
     def on_step_start(self, now: float) -> int:
         """Land provisioned units whose delay has elapsed, apply revocations
         for preemptible pools, meter per-pool unit-seconds; return usable
-        units."""
-        return self.plan.land(now, self.cfg.step_s)
+        units.  In convergence mode the converger then reconciles toward the
+        desired state, so healing (relaunching lost units, cancelling stuck
+        builds) starts the step a fault becomes observable -- on a converged
+        fleet it plans zero steps and this is the imperative path exactly."""
+        units = self.plan.land(now, self.cfg.step_s)
+        if self._converger is not None and self._converger.desired is not None:
+            outcomes = self._converger.converge(now)
+            if outcomes:
+                self._absorb(outcomes)
+                units = self.plan.total_live
+        return units
 
     def note_step(self, busy_fraction: float, new_arrivals: int) -> None:
         """Accumulate the infrastructure/system window for the next Observation."""
@@ -194,6 +237,8 @@ class ScalingController:
         obs = self.observe(time=time, n_in_system=n_in_system)
         d: Decision = self.policy.decide(obs)
         deltas = d.pool_deltas(self.plan.default_pool)
+        if self._converger is not None:
+            return self._adapt_convergence(d, deltas, time)
         applied_pools: dict[str, int] = {}
         # release BEFORE queueing this tick's upscales: a mixed per-pool
         # decision (e.g. {"spot": +3, "od": -1}) must never have its release
@@ -222,6 +267,74 @@ class ScalingController:
         self._win_busy = []
         self._win_arrivals = 0
         return rec
+
+    # -- convergence mode -----------------------------------------------------------
+    def _adapt_convergence(self, d: Decision, deltas: Mapping[str, int],
+                           time: float) -> DecisionRecord:
+        """Fold the policy decision into the desired state and converge.
+
+        `derive_desired` applies the imperative actuation semantics (ceiling
+        clamp, per-tick downscale cap, expensive-first distribution) to the
+        *targets*, so with no faults the emitted steps are exactly what the
+        imperative path would have done -- the golden parity tests pin this.
+        """
+        from repro.core.convergence.desired import derive_desired
+        desired = derive_desired(self._converger.desired, self.plan.stats(),
+                                 deltas, downscale_cap=self.cfg.downscale_cap)
+        if self.cfg.group is not None:
+            desired = self.cfg.group.overlay(desired, time)
+        self._converger.set_desired(desired, time, reason=d.reason)
+        applied_pools = self._absorb(self._converger.converge(time))
+        rec = DecisionRecord(time=time, requested=int(d.total),
+                             applied=sum(applied_pools.values()),
+                             reason=d.reason, units=self.units,
+                             pending=self.n_pending,
+                             pool_deltas=applied_pools)
+        self.decision_log.append(rec)
+        self._win_busy = []
+        self._win_arrivals = 0
+        return rec
+
+    def _absorb(self, outcomes) -> dict[str, int]:
+        """Fold converger step outcomes into the up/down counters and a
+        per-pool applied breakdown (launches positive, cancels and drains
+        negative; replacements are capacity-neutral).  Cancellations of
+        *stuck* builds are fault cleanup, not policy downscale, so they do
+        not count as a down decision."""
+        applied_pools: dict[str, int] = {}
+        queued_any = released_any = False
+        for o in outcomes:
+            kind = type(o.step).__name__
+            pool = o.step.pool
+            if kind == "LaunchUnit":
+                applied_pools[pool] = applied_pools.get(pool, 0) + o.applied
+                queued_any |= o.applied > 0
+            elif kind == "CancelPending":
+                applied_pools[pool] = applied_pools.get(pool, 0) - o.applied
+                if o.step.reason != "stuck":
+                    released_any |= o.applied > 0
+            elif kind == "DrainUnit":
+                applied_pools[pool] = applied_pools.get(pool, 0) - o.applied
+                released_any |= o.applied > 0
+            elif kind == "ReplaceUnhealthy":
+                applied_pools[pool] = (applied_pools.get(pool, 0)
+                                       - o.applied + o.queued)
+        if queued_any:
+            self.n_up += 1
+        if released_any:
+            self.n_down += 1
+        return applied_pools
+
+    def fire_webhook(self, name: str, now: float):
+        """Arm a scaling-group webhook; its floors overlay the desired state
+        from the next adaptation tick for the trigger's hold window."""
+        if self.cfg.group is None:
+            raise ValueError("no scaling group configured on this controller")
+        trig = self.cfg.group.fire(name, now)
+        if self.audit is not None:
+            self.audit.append(now, "webhook", name=name,
+                              targets=dict(trig.targets), hold_s=trig.hold_s)
+        return trig
 
 
 __all__ = ["ControllerConfig", "DecisionRecord", "ScalingController"]

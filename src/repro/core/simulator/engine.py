@@ -19,10 +19,15 @@ simulates the processor-sharing service and feeds the control plane.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import TYPE_CHECKING
 
 import numpy as np
 
 from repro.core.autoscaler.base import Policy
+
+if TYPE_CHECKING:
+    from repro.core.convergence.converger import ConvergerConfig
+    from repro.core.convergence.faults import FaultSpec
 from repro.core.scaling import (
     ControllerConfig,
     RunReport,
@@ -56,6 +61,12 @@ class SimConfig:
     pools: tuple[UnitPool, ...] | None = None   # typed capacity (None: one
                                                 # on-demand pool from the knobs above)
     sla: Sla | None = None                # per-class deadlines (None: flat sla_s)
+    convergence: bool = False             # desired-state reconciliation instead
+                                          # of imperative deltas (fault-free:
+                                          # bit-for-bit identical)
+    converge: "ConvergerConfig | None" = None   # converger timeout/retry knobs
+    faults: "tuple[FaultSpec, ...] | None" = None   # seeded fault injection
+    audit_path: str | None = None         # mirror the audit log to JSONL
 
 
 @dataclass
@@ -149,10 +160,15 @@ class Engine:
                 app_window_s=cfg.app_window_s,
                 signal_channel="sentiment",
                 pools=cfg.pools,
+                convergence=cfg.convergence,
+                converge=cfg.converge,
+                faults=cfg.faults,
+                audit_path=cfg.audit_path,
             ),
             bus,
             starting_units=cfg.starting_units,
         )
+        self.controller = ctrl      # post-run inspection (audit log, meters)
 
         units_hist: list[int] = []
         util_hist: list[float] = []

@@ -2,7 +2,6 @@
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.ssd.kernel import ssd_intra_fwd
 

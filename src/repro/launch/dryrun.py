@@ -30,7 +30,6 @@ from repro.distributed.hlo_analysis import collective_stats, roofline_terms
 from repro.distributed.sharding import batch_sharding, cache_sharding, param_sharding
 from repro.launch.mesh import make_production_mesh
 from repro.models import build_model
-from repro.models.common import ModelConfig
 from repro.optim.adamw import AdamWConfig, adamw_init
 from repro.training.train_step import make_train_step
 

@@ -6,7 +6,7 @@ Defined as FUNCTIONS so importing this module never touches jax device state
 from __future__ import annotations
 
 import jax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:

@@ -55,7 +55,8 @@ class ServeBackend:
                  policy=None, adapt_period_s: float = 5.0,
                  provision_delay_s: float = 3.0, app_window_s: float = 10.0,
                  starting_slots: int = 1, stall_steps: float = 50.0,
-                 pools=None, sla=None, decode_steps: int = 1):
+                 pools=None, sla=None, decode_steps: int = 1,
+                 convergence: bool = False, faults=None, audit_path=None):
         self.eng = eng
         # tokens each slot advances per virtual second (one K-step device
         # loop per step); 1 keeps the classic one-token-per-second clock
@@ -79,6 +80,9 @@ class ServeBackend:
                 app_window_s=app_window_s,
                 signal_channel="output_score",
                 pools=pools,
+                convergence=convergence,
+                faults=faults,
+                audit_path=audit_path,
             ),
             SignalBus(("output_score",), bin_s=1.0),
             starting_units=starting_slots,
@@ -206,7 +210,9 @@ def serve(args) -> int:
     policy = make_policy(args.policy) if args.policy else None
     backend = ServeBackend(eng, reqs, sla_s=args.sla, horizon_s=args.horizon,
                            policy=policy, stall_steps=args.stall_steps,
-                           decode_steps=args.decode_steps)
+                           decode_steps=args.decode_steps,
+                           convergence=args.convergence,
+                           audit_path=args.audit_path)
     t0 = time.time()
     try:
         rep = backend.run()
@@ -246,6 +252,12 @@ def main():
                     help="tokens each slot advances per virtual second (one "
                          "K-step device loop per engine step); 1 keeps the "
                          "classic one-token-per-second virtual clock")
+    ap.add_argument("--convergence", action="store_true",
+                    help="drive slot capacity through the convergence control "
+                         "plane (desired-state reconciliation; see "
+                         "repro.core.convergence) instead of imperative deltas")
+    ap.add_argument("--audit-path", default=None,
+                    help="mirror the convergence audit log to this JSONL file")
     ap.add_argument("--policy", default=None,
                     help="registered policy name (default: the backend's "
                          "target-tracking rule; see repro.core.scaling)")

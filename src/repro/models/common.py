@@ -7,14 +7,11 @@ pure functions (init / train logits / prefill / decode_step) suitable for
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field
-from functools import partial
-from typing import Any, Callable
+from dataclasses import dataclass
+from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 @dataclass(frozen=True)

@@ -11,15 +11,12 @@ Key properties:
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from functools import partial
-from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 
 from repro.models import attention as attn_mod
-from repro.models.attention import mha_decode, sdpa
+from repro.models.attention import sdpa
 from repro.models.common import (
     ModelConfig, apply_rope, gated_mlp, init_dense, rms_norm, rope_tables,
 )

@@ -5,7 +5,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models import attention as attn_mod
 from repro.models.attention import sdpa
 from repro.models.common import (
     ModelConfig, apply_rope, gated_mlp, init_dense, rms_norm, rope_tables,

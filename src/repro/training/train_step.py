@@ -8,8 +8,7 @@ stays O(1) in the number of microbatches.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,541 @@
+"""Convergence-plane tests: desired-state derivation, the pure planner
+(including idempotence on a converged fleet), the converger's healing /
+retry / backoff / give-up discipline under injected faults, fault-free
+golden parity with the imperative controller (simulator goldens bit-for-bit),
+audit-log replay, and scaling-group config validation with scheduled and
+webhook desired-state changes."""
+import json
+
+import pytest
+
+from repro.core.autoscaler import (
+    AppDataPolicy,
+    CompositePolicy,
+    Decision,
+    LoadPolicy,
+    Policy,
+    ThresholdPolicy,
+    WebhookPolicy,
+)
+from repro.core.autoscaler.base import Observation
+from repro.core.convergence import (
+    AuditLog,
+    CancelPending,
+    Converger,
+    ConvergerConfig,
+    DesiredGroup,
+    DrainUnit,
+    FaultInjector,
+    FaultSpec,
+    LaunchUnit,
+    PoolTarget,
+    ReplaceUnhealthy,
+    ScalingGroup,
+    derive_desired,
+    observed_group,
+    plan_steps,
+    replay,
+    validate_group_config,
+)
+from repro.core.scaling import (
+    CapacityPlan,
+    ControllerConfig,
+    PoolStats,
+    ScalingController,
+    SignalBus,
+    UnitPool,
+)
+
+
+# ---------------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------------
+
+class _Script(Policy):
+    name = "script"
+
+    def __init__(self, deltas):
+        self.deltas = list(deltas)
+        self.i = 0
+
+    def reset(self):
+        self.i = 0
+
+    def decide(self, obs):
+        d = self.deltas[self.i] if self.i < len(self.deltas) else 0
+        self.i += 1
+        if isinstance(d, dict):
+            return Decision(0, "scripted", pools=d)
+        return Decision(d, "scripted")
+
+
+def _drive(ctrl, n_steps, *, step_s=1.0):
+    units = []
+    for k in range(n_steps):
+        units.append(ctrl.on_step_start(k * step_s))
+        ctrl.note_step(0.5, 0)
+        ctrl.maybe_adapt(time=(k + 1) * step_s, n_in_system=0)
+    return units
+
+
+def _ctrl(policy, *, convergence, starting=1, pools=None, faults=None,
+          converge=None, max_units=8, adapt=10.0, delay=20.0, audit_path=None):
+    cfg = ControllerConfig(adapt_period_s=adapt, provision_delay_s=delay,
+                           min_units=1, max_units=max_units, step_s=1.0,
+                           app_window_s=adapt, pools=pools,
+                           convergence=convergence, faults=faults,
+                           converge=converge, audit_path=audit_path)
+    return ScalingController(policy, cfg, SignalBus(("app",), bin_s=1.0),
+                             starting_units=starting)
+
+
+def _stats(**pools):
+    """PoolStats shorthand: name=(units, pending, cost, min, max[, unhealthy])."""
+    out = {}
+    for name, spec in pools.items():
+        units, pending, cost, mn, mx = spec[:5]
+        unhealthy = spec[5] if len(spec) > 5 else 0
+        out[name] = PoolStats(units=units, pending=pending, cost_rate=cost,
+                              min_units=mn, max_units=mx, unhealthy=unhealthy)
+    return out
+
+
+def _final_state(plan):
+    return {name: {"live": s.units, "pending": s.pending}
+            for name, s in plan.stats().items()}
+
+
+# ---------------------------------------------------------------------------------
+# desired-state derivation (the policy -> target adapter)
+# ---------------------------------------------------------------------------------
+
+def test_derive_from_observed_and_positive_delta_clamps_to_ceiling():
+    stats = _stats(od=(2, 1, 3.0, 1, 4))
+    d = derive_desired(None, stats, {"od": 5})
+    assert d.target_of("od") == 4                # 2+1 +5 clamped to max_units
+    assert d.targets["od"].min_units == 1
+    # no deltas: desired ratifies observed
+    assert derive_desired(None, stats, {}).target_of("od") == 3
+    assert observed_group(stats).target_of("od") == 3
+
+
+def test_derive_persists_previous_targets():
+    stats = _stats(od=(2, 0, 3.0, 1, 8))
+    prev = DesiredGroup({"od": PoolTarget(target=5, min_units=1, max_units=8)})
+    # observed dropped to 2 (faults) but desired stays 5 without a new vote
+    assert derive_desired(prev, stats, {}).target_of("od") == 5
+    assert derive_desired(prev, stats, {"od": 1}).target_of("od") == 6
+
+
+def test_derive_downscale_cap_and_expensive_first_distribution():
+    stats = _stats(od=(3, 0, 3.0, 1, 8), spot=(2, 2, 1.0, 0, 8))
+    # net down-vote of 3 capped at 1 per tick; expensive od has no pending,
+    # so pass 1 cancels nothing there... but od is the pricier pool and has
+    # live above floor only after spot's pending is considered.  Pass 1
+    # (cancellable pending) runs expensive-first over ALL pools: od none,
+    # spot 2 -> the single capped unit comes off spot's pending.
+    d = derive_desired(None, stats, {"od": -3})
+    assert d.target_of("od") == 3 and d.target_of("spot") == 3
+    # cap raised: after spot's pending, live sheds expensive-first to floors
+    d = derive_desired(None, stats, {"od": -9}, downscale_cap=6)
+    assert d.target_of("od") == 1                 # od live -> floor (pass 2)
+    assert d.target_of("spot") == 0               # pending + live both taken
+    # floor binds: nothing left to take
+    d = derive_desired(None, stats, {"od": -20}, downscale_cap=20)
+    assert d.target_of("od") == 1 and d.target_of("spot") == 0
+
+
+def test_derive_unknown_pool_fails_loudly():
+    with pytest.raises(ValueError, match="unknown pool"):
+        derive_desired(None, _stats(od=(1, 0, 1.0, 0, 4)), {"Spot": 1})
+
+
+# ---------------------------------------------------------------------------------
+# the pure planner
+# ---------------------------------------------------------------------------------
+
+def test_planner_idempotent_on_converged_state():
+    """Satellite: re-planning a converged fleet emits zero steps."""
+    stats = _stats(od=(3, 1, 3.0, 1, 8), spot=(2, 0, 1.0, 0, 8))
+    desired = observed_group(stats)
+    assert plan_steps(desired, stats) == []
+    # and planning the same diff twice yields the same steps (pure function)
+    desired2 = DesiredGroup({"od": PoolTarget(6, 1, 8),
+                             "spot": PoolTarget(0, 0, 8)})
+    assert plan_steps(desired2, stats) == plan_steps(desired2, stats)
+
+
+def test_planner_launch_cancel_drain_split():
+    stats = _stats(od=(3, 2, 3.0, 1, 8), spot=(1, 0, 1.0, 0, 8))
+    desired = DesiredGroup({"od": PoolTarget(2, 1, 8),
+                            "spot": PoolTarget(4, 0, 8)})
+    steps = plan_steps(desired, stats)
+    # od surplus 3: cancel both pending first, then drain 1 live (floor 1
+    # allows 2, surplus only needs 1); spot deficit 3: launch
+    assert CancelPending("od", 2) in steps
+    assert DrainUnit("od", 1) in steps
+    assert steps[-1] == LaunchUnit("spot", 3)
+    # downs come before ups so freed headroom is usable in the same tick
+    assert [type(s) for s in steps] == [CancelPending, DrainUnit, LaunchUnit]
+
+
+def test_planner_drain_respects_floor():
+    stats = _stats(od=(2, 0, 3.0, 2, 8))
+    steps = plan_steps(DesiredGroup({"od": PoolTarget(0, 2, 8)}), stats)
+    assert steps == []                            # live at floor: nothing to do
+
+
+def test_planner_stuck_cancel_and_blocked_launch():
+    stats = _stats(od=(1, 3, 3.0, 1, 8))
+    desired = DesiredGroup({"od": PoolTarget(4, 1, 8)})
+    steps = plan_steps(desired, stats, overdue={"od": 3})
+    # the 3 stuck builds are cancelled and relaunched in the same plan
+    assert steps == [CancelPending("od", 3, reason="stuck"),
+                     LaunchUnit("od", 3)]
+    # a pool in retry backoff cancels but does not relaunch
+    steps = plan_steps(desired, stats, overdue={"od": 3},
+                       launch_blocked={"od"})
+    assert steps == [CancelPending("od", 3, reason="stuck")]
+
+
+def test_planner_replace_unhealthy_and_flap_damping():
+    stats = _stats(od=(4, 0, 3.0, 1, 8, 2))
+    desired = observed_group(stats)
+    assert plan_steps(desired, stats) == [ReplaceUnhealthy("od", 2)]
+    assert plan_steps(desired, stats, replace_blocked={"od"}) == []
+
+
+# ---------------------------------------------------------------------------------
+# fault injection
+# ---------------------------------------------------------------------------------
+
+def test_fault_spec_validation_and_windowing():
+    with pytest.raises(ValueError, match="loss_rate"):
+        FaultSpec(loss_rate=-1.0)
+    with pytest.raises(ValueError, match="stuck_p"):
+        FaultSpec(stuck_p=1.5)
+    with pytest.raises(ValueError, match="end_s"):
+        FaultSpec(start_s=10.0, end_s=5.0)
+    spec = FaultSpec(pool="od", loss_rate=0.1, start_s=10.0, end_s=20.0)
+    assert spec.active("od", 10.0) and not spec.active("od", 20.0)
+    assert not spec.active("spot", 15.0)
+    assert FaultSpec(loss_rate=0.1).active("anything", 1e9)
+
+
+def test_fault_injector_is_seeded_and_deterministic():
+    mk = lambda: FaultInjector((FaultSpec(loss_rate=0.05, stuck_p=0.3,
+                                          seed=11),))
+    a, b = mk(), mk()
+    draws_a = [a.step_draws("p", 10, 0, float(t), 1.0) for t in range(100)]
+    draws_b = [b.step_draws("p", 10, 0, float(t), 1.0) for t in range(100)]
+    assert draws_a == draws_b
+    assert any(lost for lost, _, _ in draws_a)
+    sa = [a.stuck_builds("p", 5, 0.0) for _ in range(50)]
+    sb = [b.stuck_builds("p", 5, 0.0) for _ in range(50)]
+    assert sa == sb and 0 < sum(sa) < 250
+    a.reset()
+    assert [a.step_draws("p", 10, 0, float(t), 1.0)
+            for t in range(100)] == draws_a
+
+
+def test_plan_threads_stuck_builds_through_pending():
+    plan = CapacityPlan(
+        (UnitPool("od", provision_delay_s=10.0, max_units=8),),
+        starting_units=1,
+        faults=FaultInjector((FaultSpec(stuck_p=1.0, seed=0),)))
+    assert plan.request("od", 3, now=0.0) == 3    # queued, but all stuck
+    assert plan.pending_of("od") == 3             # observably pending
+    plan.land(100.0)
+    assert plan.live_of("od") == 1                # they never land
+    assert plan.overdue_pending("od", 100.0, 30.0) == 3
+    assert plan.cancel_pending("od", 3) == 3
+    assert plan.pending_of("od") == 0
+    assert plan.meters()["od"].cancelled == 3
+
+
+# ---------------------------------------------------------------------------------
+# converger: healing, retries, backoff, give-up
+# ---------------------------------------------------------------------------------
+
+class _Hold(Policy):
+    name = "hold"
+
+    def decide(self, obs):
+        return Decision(0, "hold")
+
+
+def test_converger_heals_unit_loss_imperative_stays_degraded():
+    faults = (FaultSpec(loss_rate=1 / 50.0, start_s=100.0, end_s=200.0,
+                        seed=7),)
+    imp = _ctrl(_Hold(), convergence=False, starting=5, faults=faults,
+                delay=10.0)
+    conv = _ctrl(_Hold(), convergence=True, starting=5, faults=faults,
+                 delay=10.0,
+                 converge=ConvergerConfig(build_timeout_s=15.0))
+    ui = _drive(imp, 600)
+    uc = _drive(conv, 600)
+    assert ui[-1] < 5                   # losses are never healed
+    assert uc[-1] == 5                  # converger relaunched every loss
+    assert sum(uc) > sum(ui)
+    # the audit log accounts for every lost unit
+    lost = sum(r.get("lost", 0) for r in conv.audit.records
+               if r["kind"] == "events")
+    assert lost == conv.plan.meters()["on-demand"].lost > 0
+    assert replay(conv.audit.records) == _final_state(conv.plan)
+
+
+def test_converger_cancels_stuck_builds_and_retries():
+    faults = (FaultSpec(stuck_p=0.9, start_s=100.0, end_s=160.0, seed=3),)
+    script = [0] * 11 + [4]             # upscale lands inside the fault window
+
+    def run(convergence):
+        ctrl = _ctrl(_Script(script), convergence=convergence, starting=1,
+                     faults=faults, delay=10.0,
+                     converge=ConvergerConfig(build_timeout_s=12.0,
+                                              backoff_base_s=4.0,
+                                              max_retries=8))
+        units = _drive(ctrl, 600)
+        return units, ctrl
+
+    ui, imp = run(False)
+    uc, conv = run(True)
+    assert ui[-1] < 5 and imp.plan.total_pending > 0   # clogged forever
+    assert uc[-1] == 5 and conv.plan.total_pending == 0
+    # the retry discipline left its trace: backoff records, then success
+    kinds = [r["kind"] for r in conv.audit.records]
+    assert "backoff" in kinds
+    assert any(r["kind"] == "step" and r["step"] == "CancelPending"
+               and r.get("reason") == "stuck" for r in conv.audit.records)
+    assert replay(conv.audit.records) == _final_state(conv.plan)
+
+
+def test_converger_gives_up_after_max_retries_and_desired_change_resets():
+    plan = CapacityPlan(
+        (UnitPool("od", provision_delay_s=5.0, max_units=8),),
+        starting_units=1,
+        faults=FaultInjector((FaultSpec(stuck_p=1.0, seed=0),)))
+    conv = Converger(plan, ConvergerConfig(build_timeout_s=5.0,
+                                           backoff_base_s=2.0,
+                                           backoff_max_s=16.0, max_retries=2),
+                     audit=AuditLog())
+    conv.set_desired(DesiredGroup({"od": PoolTarget(3, 1, 8)}), 0.0)
+    t = 0.0
+    for _ in range(200):
+        plan.land(t)
+        conv.converge(t)
+        t += 1.0
+    # every build sticks: after max_retries the pool is parked
+    assert any(r["kind"] == "gave_up" for r in conv.audit.records)
+    assert plan.pending_of("od") == 0            # last stuck batch cancelled
+    launches_before = sum(r["applied"] for r in conv.audit.records
+                          if r["kind"] == "step" and r["step"] == "LaunchUnit")
+    conv.converge(t)
+    assert sum(r["applied"] for r in conv.audit.records
+               if r["kind"] == "step" and r["step"] == "LaunchUnit") == \
+        launches_before                          # parked: no new launches
+    # a new desired target un-parks the pool
+    conv.set_desired(DesiredGroup({"od": PoolTarget(4, 1, 8)}), t)
+    out = conv.converge(t)
+    assert any(isinstance(o.step, LaunchUnit) and o.applied > 0 for o in out)
+
+
+def test_converger_replaces_flapping_units_with_damping():
+    faults = (FaultSpec(flap_rate=1 / 10.0, heal_rate=0.0, start_s=50.0,
+                        end_s=80.0, seed=1),)
+    conv = _ctrl(_Hold(), convergence=True, starting=4, faults=faults,
+                 delay=5.0,
+                 converge=ConvergerConfig(build_timeout_s=15.0,
+                                          replace_backoff_s=30.0))
+    _drive(conv, 300)
+    replaces = [r for r in conv.audit.records
+                if r["kind"] == "step" and r["step"] == "ReplaceUnhealthy"]
+    assert replaces                               # flapped units were replaced
+    # damping: consecutive replacements in one pool are >= replace_backoff_s apart
+    times = [r["t"] for r in replaces]
+    assert all(b - a >= 30.0 for a, b in zip(times, times[1:]))
+    assert conv.plan.stats()["on-demand"].unhealthy == 0
+    assert conv.units == 4
+    assert replay(conv.audit.records) == _final_state(conv.plan)
+
+
+# ---------------------------------------------------------------------------------
+# fault-free parity with the imperative controller
+# ---------------------------------------------------------------------------------
+
+def test_scripted_parity_scalar_and_multipool():
+    """Same scripts, same configs: convergence mode must actuate identically
+    (units trajectory, counters, decision records) with no faults injected."""
+    script = [5, 0, -3, 0, 0, 2, -1, -1, 0, 8, 0, -2] * 3
+
+    def fingerprint(ctrl, units):
+        return (units, ctrl.n_up, ctrl.n_down,
+                [(r.applied, r.units, r.pending, r.pool_deltas)
+                 for r in ctrl.decision_log])
+
+    for pools, scr in (
+        (None, script),
+        ((UnitPool("od", provision_delay_s=20.0, cost_rate=3.0, min_units=1,
+                   max_units=4),
+          UnitPool("spot", provision_delay_s=5.0, cost_rate=1.0, max_units=3)),
+         [{"spot": 3}, 0, {"od": 2, "spot": -1}, 0, -2, 0, {"spot": 5}, -1,
+          0, 0] * 3),
+    ):
+        imp = _ctrl(_Script(scr), convergence=False, pools=pools, max_units=6)
+        conv = _ctrl(_Script(scr), convergence=True, pools=pools, max_units=6)
+        fi = fingerprint(imp, _drive(imp, 400))
+        fc = fingerprint(conv, _drive(conv, 400))
+        assert fi == fc
+        assert replay(conv.audit.records) == _final_state(conv.plan)
+
+
+def test_simulator_golden_parity_in_convergence_mode():
+    """Acceptance: convergence mode, no faults, single on-demand pool ->
+    the simulator goldens are bit-for-bit the imperative controller's."""
+    from test_scaling import GOLDEN_ENGLAND
+    from repro.core.simulator import SimConfig, generate_trace, run_scenario
+    from repro.core.simulator.distributions import ServiceModel
+
+    def fingerprint(r):
+        return (r.violation_rate, r.cpu_seconds, r.n_decisions_up,
+                r.n_decisions_down, float(r.delays.sum()),
+                int(r.units_t.sum()), int(r.units_t.max()))
+
+    sm = ServiceModel()
+    tr = generate_trace("england", seed=0)
+    cfg = SimConfig(convergence=True)
+    assert fingerprint(run_scenario(tr, ThresholdPolicy(0.9), cfg)) == \
+        GOLDEN_ENGLAND["threshold"]
+    pol = CompositePolicy([LoadPolicy(sm, quantile=0.99999),
+                           AppDataPolicy(extra_units=5)])
+    assert fingerprint(run_scenario(tr, pol, cfg)) == \
+        GOLDEN_ENGLAND["load+appdata"]
+
+
+# ---------------------------------------------------------------------------------
+# audit log
+# ---------------------------------------------------------------------------------
+
+def test_audit_jsonl_roundtrip_and_replay(tmp_path):
+    path = str(tmp_path / "audit.jsonl")
+    conv = _ctrl(_Script([3, 0, -1, 0, 2]), convergence=True, starting=2,
+                 delay=5.0, audit_path=path)
+    _drive(conv, 80)
+    conv.audit.close()
+    loaded = AuditLog.load(path)
+    assert loaded == conv.audit.records
+    assert all(set(r) >= {"t", "kind"} for r in loaded)
+    # the file is genuine JSONL: one object per line
+    with open(path) as fh:
+        assert all(isinstance(json.loads(line), dict) for line in fh)
+    assert replay(loaded) == _final_state(conv.plan)
+    kinds = {r["kind"] for r in loaded}
+    assert {"init", "desired", "plan", "step", "events"} <= kinds
+
+
+# ---------------------------------------------------------------------------------
+# scaling groups: schema validation, scheduled + webhook desired changes
+# ---------------------------------------------------------------------------------
+
+_GROUP_CFG = {
+    "name": "web",
+    "pools": [
+        {"name": "od", "provision_delay_s": 10.0, "cost_rate": 3.0,
+         "min_units": 1, "max_units": 8},
+        {"name": "spot", "provision_delay_s": 5.0, "cost_rate": 1.0,
+         "max_units": 4},
+    ],
+    "schedule": [
+        {"at_s": 100.0, "end_s": 200.0, "targets": {"od": 4}},
+    ],
+    "webhooks": [
+        {"name": "breaking-news", "hold_s": 60.0, "targets": {"od": 6}},
+    ],
+}
+
+
+def test_group_config_validation_errors_name_their_path():
+    validate_group_config(_GROUP_CFG)             # the happy path
+    bad = {**_GROUP_CFG, "pools": [{"name": "od", "cost_rate": "cheap"}]}
+    with pytest.raises(ValueError, match=r"pools\[0\]\.cost_rate.*number"):
+        validate_group_config(bad)
+    with pytest.raises(ValueError, match="required key missing"):
+        validate_group_config({"name": "g"})
+    with pytest.raises(ValueError, match=r"unknown key.*typo"):
+        validate_group_config({**_GROUP_CFG, "typo": 1})
+    bad = {**_GROUP_CFG,
+           "schedule": [{"at_s": 5.0, "end_s": 1.0, "targets": {"od": 1}}]}
+    with pytest.raises(ValueError, match=r"schedule\[0\]\.end_s"):
+        validate_group_config(bad)
+    bad = {**_GROUP_CFG,
+           "webhooks": [{"name": "x", "hold_s": 1.0,
+                         "targets": {"nope": 2}}]}
+    with pytest.raises(ValueError, match=r"webhooks\[0\]\.targets.*'nope'"):
+        validate_group_config(bad)
+    bad = {**_GROUP_CFG,
+           "schedule": [{"at_s": 0.0, "end_s": 1.0, "targets": {"od": True}}]}
+    with pytest.raises(ValueError, match="expected int"):
+        validate_group_config(bad)
+
+
+def test_group_scheduled_and_webhook_floors_overlay_desired():
+    grp = ScalingGroup.from_config(_GROUP_CFG)
+    desired = DesiredGroup({"od": PoolTarget(2, 1, 8),
+                            "spot": PoolTarget(1, 0, 4)})
+    assert grp.overlay(desired, 50.0).target_of("od") == 2    # outside window
+    assert grp.overlay(desired, 150.0).target_of("od") == 4   # scheduled floor
+    assert grp.overlay(desired, 150.0).target_of("spot") == 1
+    grp.fire("breaking-news", 150.0)
+    assert grp.overlay(desired, 150.0).target_of("od") == 6   # webhook wins
+    assert grp.overlay(desired, 211.0).target_of("od") == 2   # both expired
+    with pytest.raises(ValueError, match="unknown webhook"):
+        grp.fire("nope", 0.0)
+    grp.reset()
+    assert grp.overlay(desired, 150.0).target_of("od") == 4
+
+
+def test_group_drives_convergence_controller_end_to_end():
+    grp = ScalingGroup.from_config(_GROUP_CFG)
+    cfg = ControllerConfig(adapt_period_s=10.0, step_s=1.0,
+                           app_window_s=10.0, group=grp, convergence=True)
+    ctrl = ScalingController(_Hold(), cfg, SignalBus(("app",), bin_s=1.0),
+                             starting_units=1)
+    hist = _drive(ctrl, 90)
+    assert hist[50] == 1                          # before the window: baseline
+    ctrl.fire_webhook("breaking-news", 90.0)
+    hist += _drive_from(ctrl, 90, 160)
+    # scheduled floor (4) took effect after t=100+delay; webhook raised to 6
+    assert ctrl.plan.live_of("od") == 6
+    assert any(r["kind"] == "webhook" for r in ctrl.audit.records)
+    assert replay(ctrl.audit.records) == _final_state(ctrl.plan)
+
+
+def _drive_from(ctrl, t0, t1):
+    units = []
+    for k in range(int(t0), int(t1)):
+        units.append(ctrl.on_step_start(float(k)))
+        ctrl.note_step(0.5, 0)
+        ctrl.maybe_adapt(time=float(k + 1), n_in_system=0)
+    return units
+
+
+def test_webhook_policy_imperative_mode():
+    pol = WebhookPolicy({"spike": (5, 30.0)},
+                        schedule=((100.0, 200.0, 3),))
+    obs = lambda t, n: Observation(time=t, n_units=n, n_pending=0,
+                                   utilization=0.5, n_in_system=0,
+                                   input_rate=0.0)
+    assert pol.decide(obs(0.0, 1)).delta == 0     # nothing active
+    pol.fire("spike", 10.0)
+    assert pol.decide(obs(10.0, 1)).delta == 4    # floor 5 - have 1
+    assert pol.decide(obs(45.0, 1)).delta == 0    # hold expired
+    assert pol.decide(obs(150.0, 1)).delta == 2   # scheduled window floor 3
+    with pytest.raises(ValueError, match="unknown webhook"):
+        pol.fire("nope", 0.0)
+    pol.reset()
+    assert pol.decide(obs(10.0, 1)).delta == 0
+    # the group's imperative fallback wires both paths together
+    grp = ScalingGroup.from_config(_GROUP_CFG)
+    gp = grp.as_policy()
+    assert gp.decide(obs(150.0, 1)).delta == 3    # scheduled total floor 4
+    gp.fire("breaking-news", 150.0)
+    assert gp.decide(obs(150.0, 1)).delta == 5    # webhook total floor 6

@@ -1,5 +1,4 @@
 """Paged KV cache: pure page-ops semantics + pool free-list discipline."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

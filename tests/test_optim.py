@@ -1,5 +1,4 @@
 """Optimizer behaviour: descent, clipping, schedule."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 
