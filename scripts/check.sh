@@ -1,13 +1,29 @@
 #!/usr/bin/env bash
 # One verify entrypoint for builders:
-#   tier-1 test suite  +  fast benchmark smoke pass (control-plane paths).
-# Usage:  bash scripts/check.sh
+#   lint (ruff + replint)  +  tier-1 test suite  +  benchmark smoke pass.
+#
+# Usage:
+#   bash scripts/check.sh           # full gate (lint + pytest + benchmarks)
+#   bash scripts/check.sh --fast    # lint + pytest only, for quick local loops
+#
+# replint is the project-specific static-analysis gate (trace-safety,
+# Pallas kernel rules, control-plane invariants):
+#   PYTHONPATH=src python -m repro.lint src tests benchmarks
+# Suppress a finding inline with `# replint: disable=RULE -- reason`;
+# see DESIGN.md "The static-analysis gate" and `python -m repro.lint
+# --list-rules`.  The JSON report lands in benchmarks/artifacts/ and is
+# uploaded by CI.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+FAST=0
+if [[ "${1:-}" == "--fast" ]]; then
+  FAST=1
+fi
+
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== lint: ruff (errors + unused imports; see ruff.toml) =="
+echo "== lint: ruff (errors, unused imports/locals, redefinitions) =="
 if command -v ruff >/dev/null 2>&1; then
   ruff check src tests benchmarks
 else
@@ -15,8 +31,23 @@ else
 fi
 
 echo
+echo "== lint: replint selftest (every rule fires on its fixture corpus) =="
+python -m repro.lint --selftest -q
+
+echo
+echo "== lint: replint (trace-safety + Pallas + control-plane rules) =="
+python -m repro.lint src tests benchmarks \
+  --json benchmarks/artifacts/replint_report.json
+
+echo
 echo "== tier-1: pytest =="
 python -m pytest -x -q
+
+if [[ "$FAST" == "1" ]]; then
+  echo
+  echo "check.sh: FAST OK (lint + pytest; benchmark smoke skipped)"
+  exit 0
+fi
 
 echo
 echo "== smoke: benchmarks =="

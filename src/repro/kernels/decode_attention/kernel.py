@@ -43,8 +43,6 @@ def _dec_kernel(s_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
         q = q_ref[0].astype(jnp.float32) * sm_scale           # (Hq, d)
         k = k_ref[0].astype(jnp.float32)                      # (bk, Hkv, d)
         v = v_ref[0].astype(jnp.float32)
-        Hq = q.shape[0]
-        Hkv = k.shape[1]
         # GQA: logits[h, t] = q[h] . k[t, h // group]
         kr = jnp.repeat(k, group, axis=1)                     # (bk, Hq, d)
         s = jnp.einsum("hd,thd->ht", q, kr)                   # (Hq, bk)

@@ -14,6 +14,7 @@ def _interpret() -> bool:
     return jax.default_backend() == "cpu"
 
 
+# replint: traced -- jitted from the serving engine
 def decode_attention(q1, k_cache, v_cache, pos, *, window: int | None = None,
                      block_k: int | None = None):
     """q1: (B, 1, Hq, D); caches: (B, S, Hkv, D); pos: scalar int32 valid length.
@@ -31,6 +32,7 @@ def decode_attention(q1, k_cache, v_cache, pos, *, window: int | None = None,
     return out[:, None]
 
 
+# replint: traced -- jitted from the serving engine
 def decode_attention_paged(q1, k_pages, v_pages, block_table, lengths, *,
                            window=None, k_scale=None, v_scale=None):
     """Block-table decode attention over a paged KV pool.

@@ -19,6 +19,7 @@ def _interpret() -> bool:
 
 
 @partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k"))
+# replint: traced -- jitted from the serving engine
 def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
                     block_q: int = 512, block_k: int = 512):
     """q/k/v: (B, S, H{q,kv}, D) -> (B, S, Hq, D).  Static window."""
@@ -29,6 +30,7 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
     return out.transpose(0, 2, 1, 3)
 
 
+# replint: traced -- jitted from the serving engine
 def flash_attention_dyn(q, k, v, window, *, block_q: int = 512, block_k: int = 512):
     """Traced-window variant used inside ``lax.scan`` over heterogeneous layers.
 

@@ -23,6 +23,7 @@ def _interpret() -> bool:
     return jax.default_backend() == "cpu"
 
 
+# replint: traced -- jitted from the serving engine
 def greedy_epilogue(logits, *, use_kernel: bool = False, block_v: int = 2048):
     """logits: (B, V) f32 -> (token (B,) int32, logprob (B,) f32).
 

@@ -10,13 +10,13 @@ def _interpret() -> bool:
     return jax.default_backend() == "cpu"
 
 
+# replint: traced -- jitted from the serving engine
 def ssd_intra(xb, acs, Bh, Ch):
     """Model layout: xb (b, nc, q, h, p); acs (b, nc, q, h); Bh/Ch (b, nc, q, h, n).
 
     Returns y_intra (b, nc, q, h, p) fp32.
     """
     b, nc, q, h, p = xb.shape
-    n = Bh.shape[-1]
     flat = lambda a: a.reshape((b * nc,) + a.shape[2:])
     y = ssd_intra_fwd(flat(xb), flat(acs), flat(Bh), flat(Ch),
                       interpret=_interpret())

@@ -1,0 +1,16 @@
+"""replint -- project-specific static analysis for this repo.
+
+Three rule families guard the properties the reproduction's numbers rest
+on: the decode hot path must never silently sync to host (TRC1xx), Pallas
+kernels must follow the ref discipline (PLK2xx), and the control plane must
+stay deterministic and replayable (CPL3xx).  See DESIGN.md, "The
+static-analysis gate".
+
+Run it::
+
+    PYTHONPATH=src python -m repro.lint src tests benchmarks
+"""
+from .engine import Finding, Report, lint_paths
+from .rules import ALL_RULES, get_rule
+
+__all__ = ["Finding", "Report", "lint_paths", "ALL_RULES", "get_rule"]

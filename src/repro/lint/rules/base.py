@@ -1,0 +1,41 @@
+"""Rule base class and registry plumbing."""
+from __future__ import annotations
+
+import re
+
+from ..engine import Finding, ModuleContext
+
+
+class Rule:
+    """One named check.  Subclasses set ``id``/``name``/``description`` and
+    implement ``check``; ``scope`` is a tuple of path-regex fragments the
+    rule is limited to (empty = every file)."""
+
+    id: str = "REP999"
+    name: str = "unnamed"
+    description: str = ""
+    scope: tuple[str, ...] = ()
+
+    def applies(self, path: str) -> bool:
+        if not self.scope:
+            return True
+        return any(re.search(pat, path) for pat in self.scope)
+
+    def check(self, ctx: ModuleContext) -> list[Finding]:   # pragma: no cover
+        raise NotImplementedError
+
+    def finding(self, ctx: ModuleContext, node, message: str) -> Finding:
+        return Finding(rule=self.id, name=self.name, path=ctx.path,
+                       line=getattr(node, "lineno", 1),
+                       col=getattr(node, "col_offset", 0), message=message)
+
+
+#: scope shared by the trace-safety family: the hot-path modules where a
+#: silent host sync costs real throughput (serving engine, LM forward,
+#: kernels).  Host-side driver/test code may sync freely.
+TRACE_SCOPE = (r"src/repro/serving/", r"src/repro/models/",
+               r"src/repro/kernels/")
+
+#: scope for the control-plane determinism family
+CONTROL_PLANE_SCOPE = (r"src/repro/core/convergence/",
+                       r"src/repro/core/scaling/")

@@ -1,0 +1,332 @@
+"""Pallas kernel rules (PLK2xx).
+
+These rules anchor on ``pl.pallas_call`` sites found by the call graph, so
+they self-scope: a file with no pallas_call produces no work.  TPU Pallas
+conventions assumed here (see the repo's kernels): kernels receive refs as
+positional args, compile-time constants as ``functools.partial``-bound
+keyword-only args, and index refs via ``[...]``/slices/``pl.ds``.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..callgraph import dotted_name
+from ..engine import Finding, ModuleContext
+from ..staticness import TRACED, classify, param_env
+from .base import Rule
+
+#: pl helpers that produce valid ref indices
+_INDEX_CALLS = {"ds", "dslice", "program_id", "num_programs", "multiple_of",
+                "cdiv"}
+
+_REF_SUFFIXES = ("_ref", "_scr", "_refs")
+
+
+def _is_ref_name(name: str) -> bool:
+    return name.endswith(_REF_SUFFIXES) or name in ("ref", "scratch")
+
+
+def _kernel_param_names(info) -> set[str]:
+    a = info.node.args
+    return {p.arg for p in a.posonlyargs + a.args}
+
+
+class KernelClosureRule(Rule):
+    id = "PLK201"
+    name = "kernel-closure"
+    description = ("kernel functions must not capture traced arrays from an "
+                   "enclosing scope; pass them as refs through pallas_call")
+
+    def _defining_env(self, info):
+        """Environment of a function's *defining* scope chain (closure
+        variables resolve here, not at the pallas_call site)."""
+        if info is None:
+            return None
+        return param_env(info, self._defining_env(info.parent))
+
+    def check(self, ctx: ModuleContext) -> list[Finding]:
+        findings = []
+        for outer, inner, kernel, scope in ctx.graph.pallas_sites:
+            if kernel is None or kernel.parent is None:
+                continue   # module-level kernel: its globals are static
+            env = self._defining_env(kernel.parent)
+            bound = set()
+            node = kernel.node
+            a = node.args
+            for p in (a.posonlyargs + a.args + a.kwonlyargs):
+                bound.add(p.arg)
+            if a.vararg:
+                bound.add(a.vararg.arg)
+            if a.kwarg:
+                bound.add(a.kwarg.arg)
+            # names assigned inside the kernel are local, not captured
+            for sub in ast.walk(node):
+                if isinstance(sub, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+                    targets = (sub.targets if isinstance(sub, ast.Assign)
+                               else [sub.target])
+                    for t in targets:
+                        for n in ast.walk(t):
+                            if isinstance(n, ast.Name):
+                                bound.add(n.id)
+                elif isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    if sub is not node:
+                        bound.add(sub.name)
+                elif isinstance(sub, ast.For):
+                    for n in ast.walk(sub.target):
+                        if isinstance(n, ast.Name):
+                            bound.add(n.id)
+                elif isinstance(sub, (ast.Lambda,)):
+                    for p in sub.args.args + sub.args.kwonlyargs:
+                        bound.add(p.arg)
+            seen = set()
+            for sub in ast.walk(node):
+                if not isinstance(sub, ast.Name) or sub.id in bound:
+                    continue
+                if sub.id in seen:
+                    continue
+                seen.add(sub.id)
+                level = classify(ast.Name(id=sub.id, ctx=ast.Load()), env,
+                                 ctx.imports)
+                if level == TRACED:
+                    findings.append(self.finding(
+                        ctx, sub,
+                        f"kernel '{kernel.qualname}' closes over traced "
+                        f"value '{sub.id}' from "
+                        f"'{kernel.parent.qualname}'; pass it through "
+                        "pallas_call as a ref instead"))
+        return findings
+
+
+class RefIndexRule(Rule):
+    id = "PLK202"
+    name = "ref-index"
+    description = ("refs may only be indexed with constants, slices, "
+                   "pl.ds/pl.dslice and scalar index arithmetic -- no "
+                   "data-dependent jnp expressions")
+
+    def _index_ok(self, node: ast.expr, imports) -> bool:
+        if isinstance(node, ast.Tuple):
+            return all(self._index_ok(e, imports) for e in node.elts)
+        if isinstance(node, ast.Constant):
+            return True   # ints, None (open slice bounds), Ellipsis
+        if isinstance(node, (ast.Name, ast.Attribute)):
+            return True   # scalar locals / pl.program_id results
+        if isinstance(node, ast.Slice):
+            return all(p is None or self._index_ok(p, imports)
+                       for p in (node.lower, node.upper, node.step))
+        if isinstance(node, ast.UnaryOp):
+            return self._index_ok(node.operand, imports)
+        if isinstance(node, ast.BinOp) and isinstance(
+                node.op, (ast.Add, ast.Sub, ast.Mult, ast.FloorDiv, ast.Mod)):
+            return (self._index_ok(node.left, imports)
+                    and self._index_ok(node.right, imports))
+        if isinstance(node, ast.Call):
+            name = dotted_name(node.func, imports)
+            if name is None:
+                return False
+            last = name.rsplit(".", 1)[-1]
+            return last in _INDEX_CALLS or name in ("len", "min", "max",
+                                                    "int")
+        return False
+
+    def check(self, ctx: ModuleContext) -> list[Finding]:
+        findings = []
+        for info in ctx.graph.kernel_functions():
+            refs = {n for n in _kernel_param_names(info) if _is_ref_name(n)}
+            if not refs:
+                continue
+            for sub in ast.walk(info.node):
+                if not isinstance(sub, ast.Subscript):
+                    continue
+                if not (isinstance(sub.value, ast.Name)
+                        and sub.value.id in refs):
+                    continue
+                if not self._index_ok(sub.slice, ctx.imports):
+                    findings.append(self.finding(
+                        ctx, sub,
+                        f"ref '{sub.value.id}' in kernel '{info.qualname}' "
+                        f"indexed with "
+                        f"'{ast.unparse(sub.slice)}'; only slices, "
+                        "constants, pl.ds and scalar arithmetic are legal "
+                        "ref indices"))
+        return findings
+
+
+class RefAliasRule(Rule):
+    id = "PLK203"
+    name = "ref-alias"
+    description = ("the same array must not be passed twice to one "
+                   "pallas_call application (aliased input/output refs "
+                   "race); use input_output_aliases for intentional donation")
+
+    def check(self, ctx: ModuleContext) -> list[Finding]:
+        findings = []
+        for outer, inner, kernel, scope in ctx.graph.pallas_sites:
+            if outer is None:
+                continue
+            seen: dict[str, ast.expr] = {}
+            for arg in outer.args:
+                if isinstance(arg, ast.Starred):
+                    continue
+                if isinstance(arg, ast.Constant):
+                    continue   # scalars can repeat freely
+                key = ast.dump(arg)
+                if key in seen:
+                    findings.append(self.finding(
+                        ctx, arg,
+                        f"operand '{ast.unparse(arg)}' passed twice to the "
+                        "same pallas_call; aliased refs make in-kernel "
+                        "writes order-dependent (declare "
+                        "input_output_aliases if donation is intended)"))
+                else:
+                    seen[key] = arg
+        return findings
+
+
+class GridDivisibilityRule(Rule):
+    id = "PLK204"
+    name = "grid-divisibility"
+    description = ("where shapes and block sizes are literal, out_shape dims "
+                   "must divide by the BlockSpec block and the grid must "
+                   "tile them exactly")
+
+    # -- tiny literal folder over the enclosing function ----------------------
+    def _fold_env(self, scope) -> dict[str, int]:
+        env: dict[str, int] = {}
+        body = scope.node if scope is not None else None
+        if body is None:
+            return env
+        for sub in ast.walk(body):
+            if (isinstance(sub, ast.Assign) and len(sub.targets) == 1
+                    and isinstance(sub.targets[0], ast.Name)):
+                val = self._fold(sub.value, env)
+                if val is not None:
+                    env[sub.targets[0].id] = val
+        return env
+
+    def _fold(self, node: ast.expr, env: dict[str, int]) -> int | None:
+        if isinstance(node, ast.Constant) and isinstance(node.value, int) \
+                and not isinstance(node.value, bool):
+            return node.value
+        if isinstance(node, ast.Name):
+            return env.get(node.id)
+        if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+            v = self._fold(node.operand, env)
+            return -v if v is not None else None
+        if isinstance(node, ast.BinOp):
+            l, r = self._fold(node.left, env), self._fold(node.right, env)
+            if l is None or r is None:
+                return None
+            if isinstance(node.op, ast.Add):
+                return l + r
+            if isinstance(node.op, ast.Sub):
+                return l - r
+            if isinstance(node.op, ast.Mult):
+                return l * r
+            if isinstance(node.op, ast.FloorDiv) and r != 0:
+                return l // r
+            if isinstance(node.op, ast.Mod) and r != 0:
+                return l % r
+            return None
+        if isinstance(node, ast.Call):
+            name = dotted_name(node.func, {})
+            vals = [self._fold(a, env) for a in node.args]
+            if any(v is None for v in vals):
+                return None
+            if name in ("min", "max") and vals:
+                return min(vals) if name == "min" else max(vals)
+            if name is not None and name.rsplit(".", 1)[-1] == "cdiv" \
+                    and len(vals) == 2 and vals[1] != 0:
+                return -(-vals[0] // vals[1])
+            return None
+        return None
+
+    def _dims(self, node: ast.expr | None, env) -> list[int | None]:
+        if node is None or not isinstance(node, (ast.Tuple, ast.List)):
+            return []
+        return [self._fold(e, env) for e in node.elts]
+
+    def _kwarg(self, call: ast.Call, name: str) -> ast.expr | None:
+        for kw in call.keywords:
+            if kw.arg == name:
+                return kw.value
+        return None
+
+    def check(self, ctx: ModuleContext) -> list[Finding]:
+        findings = []
+        for outer, inner, kernel, scope in ctx.graph.pallas_sites:
+            env = self._fold_env(scope)
+
+            grid_expr = self._kwarg(inner, "grid")
+            out_spec_expr = self._kwarg(inner, "out_specs")
+            out_shape_expr = self._kwarg(inner, "out_shape")
+            # grid may live on a grid_spec constructed nearby
+            gs = self._kwarg(inner, "grid_spec")
+            if gs is not None and scope is not None:
+                gs_call = None
+                if isinstance(gs, ast.Call):
+                    gs_call = gs
+                elif isinstance(gs, ast.Name):
+                    for sub in ast.walk(scope.node):
+                        if (isinstance(sub, ast.Assign)
+                                and len(sub.targets) == 1
+                                and isinstance(sub.targets[0], ast.Name)
+                                and sub.targets[0].id == gs.id
+                                and isinstance(sub.value, ast.Call)):
+                            gs_call = sub.value
+                if gs_call is not None:
+                    grid_expr = grid_expr or self._kwarg(gs_call, "grid")
+                    out_spec_expr = out_spec_expr or self._kwarg(gs_call,
+                                                                 "out_specs")
+
+            grid = self._dims(grid_expr, env)
+
+            # out_specs: a single BlockSpec or a tuple/list of them
+            block_specs: list[ast.Call] = []
+            def collect(spec):
+                if isinstance(spec, ast.Call):
+                    block_specs.append(spec)
+                elif isinstance(spec, (ast.Tuple, ast.List)):
+                    for e in spec.elts:
+                        collect(e)
+            collect(out_spec_expr)
+
+            # out_shape: ShapeDtypeStruct((dims), dtype) or tuple/list
+            shapes: list[list[int | None]] = []
+            def collect_shape(sh):
+                if isinstance(sh, ast.Call) and sh.args:
+                    shapes.append(self._dims(sh.args[0], env))
+                elif isinstance(sh, (ast.Tuple, ast.List)):
+                    for e in sh.elts:
+                        collect_shape(e)
+            collect_shape(out_shape_expr)
+
+            for i, spec in enumerate(block_specs):
+                block = self._dims(spec.args[0] if spec.args else None, env)
+                shape = shapes[i] if i < len(shapes) else []
+                if len(block) != len(shape):
+                    continue
+                for d, (b, s) in enumerate(zip(block, shape)):
+                    if b is None or s is None or b == 0:
+                        continue
+                    if s % b != 0:
+                        findings.append(self.finding(
+                            ctx, spec,
+                            f"out_shape dim {d} = {s} is not divisible by "
+                            f"BlockSpec block dim {b}; the trailing block "
+                            "reads/writes out of bounds"))
+                # grid * block must cover the shape when everything folds
+                if grid and len(grid) == len(block):
+                    for d, (g, b, s) in enumerate(zip(grid, block, shape)):
+                        if None in (g, b, s) or b == 0 or s % b != 0:
+                            continue
+                        if g * b != s:
+                            findings.append(self.finding(
+                                ctx, spec,
+                                f"grid dim {d} = {g} with block {b} tiles "
+                                f"{g * b} elements but out_shape dim is {s}"))
+        return findings
+
+
+PALLAS_RULES = [KernelClosureRule(), RefIndexRule(), RefAliasRule(),
+                GridDivisibilityRule()]

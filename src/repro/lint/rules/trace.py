@@ -1,0 +1,177 @@
+"""Trace-safety rules (TRC1xx).
+
+All three rules only examine functions the call graph marks jit-reachable
+(jit roots, lax control-flow bodies, Pallas kernels, ``# replint: traced``
+entry points) and only fire when the staticness classifier is *sure* the
+offending operand is a tracer -- UNKNOWN stays silent by design: a lint
+gate that cries wolf gets suppressed wholesale and protects nothing.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..callgraph import dotted_name
+from ..engine import Finding, ModuleContext
+from ..staticness import (TRACED, Env, EnvBuilder, classify,
+                          function_statements, param_env, walk_expressions)
+from .base import TRACE_SCOPE, Rule
+
+#: ``x.<attr>()`` methods that force a device->host sync
+_SYNC_METHODS = {"item", "tolist", "block_until_ready", "__bool__",
+                 "__float__", "__int__"}
+
+#: dotted host-library calls that materialize their array argument
+_HOST_CALLS = {
+    "numpy.asarray", "numpy.array", "numpy.copy", "numpy.asanyarray",
+    "numpy.ascontiguousarray",
+    "jax.device_get",
+}
+
+#: builtins that coerce a tracer to a host scalar
+_COERCIONS = {"int", "float", "bool", "complex"}
+
+#: builtins/functions that stringify their arguments (TRC103)
+_FORMATTERS = {"print", "str", "repr", "format"}
+
+
+def _iter_traced_functions(ctx: ModuleContext):
+    """Yield (info, env) for each jit-reachable function, with the
+    environment seeded from params + enclosing scopes."""
+    envs: dict[int, Env] = {}
+
+    def env_for(info) -> Env:
+        key = id(info.node)
+        if key not in envs:
+            parent = env_for(info.parent) if info.parent is not None else None
+            envs[key] = param_env(info, parent)
+        return envs[key]
+
+    for info in ctx.graph.jit_reachable_functions():
+        yield info, env_for(info)
+
+
+def _scan(ctx: ModuleContext, on_stmt) -> list[Finding]:
+    """Drive a statement-order walk over every traced function; ``on_stmt``
+    gets (info, stmt, env) and returns findings for that statement."""
+    out: list[Finding] = []
+    for info, env in _iter_traced_functions(ctx):
+        builder = EnvBuilder(env, ctx.imports)
+        if isinstance(info.node, ast.Lambda):
+            out.extend(on_stmt(info, ast.Expr(value=info.node.body), env))
+            continue
+        for stmt in function_statements(info.node):
+            out.extend(on_stmt(info, stmt, env))
+            builder.visit_stmt(stmt)
+    return out
+
+
+class HostSyncRule(Rule):
+    id = "TRC101"
+    name = "host-sync"
+    description = ("no np.asarray/.item()/int()/float()/bool() on traced "
+                   "values inside jit-reachable functions")
+    scope = TRACE_SCOPE
+
+    def check(self, ctx: ModuleContext) -> list[Finding]:
+        def on_stmt(info, stmt, env):
+            findings = []
+            for node in walk_expressions(stmt):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = dotted_name(node.func, ctx.imports)
+                if name in _HOST_CALLS:
+                    if any(classify(a, env, ctx.imports) == TRACED
+                           for a in node.args):
+                        findings.append(self.finding(
+                            ctx, node,
+                            f"{name.split('.')[-1]}() on a traced value in "
+                            f"'{info.qualname}' forces a device->host sync"))
+                elif name in _COERCIONS:
+                    if any(classify(a, env, ctx.imports) == TRACED
+                           for a in node.args):
+                        findings.append(self.finding(
+                            ctx, node,
+                            f"{name}() on a traced value in "
+                            f"'{info.qualname}' forces a device->host sync "
+                            "(use astype/jnp casts instead)"))
+                elif (isinstance(node.func, ast.Attribute)
+                      and node.func.attr in _SYNC_METHODS
+                      and classify(node.func.value, env,
+                                   ctx.imports) == TRACED):
+                    findings.append(self.finding(
+                        ctx, node,
+                        f".{node.func.attr}() on a traced value in "
+                        f"'{info.qualname}' forces a device->host sync"))
+            return findings
+        return _scan(ctx, on_stmt)
+
+
+class TracedBranchRule(Rule):
+    id = "TRC102"
+    name = "traced-branch"
+    description = ("no Python if/while/for/assert on traced operands inside "
+                   "jit-reachable functions (use lax.cond/select/while_loop)")
+    scope = TRACE_SCOPE
+
+    def check(self, ctx: ModuleContext) -> list[Finding]:
+        def on_stmt(info, stmt, env):
+            findings = []
+            tests: list[tuple[ast.AST, str]] = []
+            if isinstance(stmt, (ast.If, ast.While)):
+                kind = "if" if isinstance(stmt, ast.If) else "while"
+                tests.append((stmt.test, kind))
+            elif isinstance(stmt, ast.Assert):
+                tests.append((stmt.test, "assert"))
+            elif isinstance(stmt, ast.For):
+                tests.append((stmt.iter, "for"))
+            for node in walk_expressions(stmt):
+                if isinstance(node, ast.IfExp):
+                    tests.append((node.test, "conditional expression"))
+                elif isinstance(node, (ast.ListComp, ast.SetComp,
+                                       ast.GeneratorExp, ast.DictComp)):
+                    for gen in node.generators:
+                        tests.append((gen.iter, "comprehension"))
+            for test, kind in tests:
+                if classify(test, env, ctx.imports) == TRACED:
+                    findings.append(self.finding(
+                        ctx, test,
+                        f"Python {kind} on a traced operand in "
+                        f"'{info.qualname}'; concretizes the tracer -- use "
+                        "lax.cond / jnp.where / lax.while_loop"))
+            return findings
+        return _scan(ctx, on_stmt)
+
+
+class TracedFormatRule(Rule):
+    id = "TRC103"
+    name = "traced-format"
+    description = ("no f-strings/print/str() of tracers inside jit-reachable "
+                   "functions (stringifies the abstract value or syncs)")
+    scope = TRACE_SCOPE
+
+    def check(self, ctx: ModuleContext) -> list[Finding]:
+        def on_stmt(info, stmt, env):
+            findings = []
+            for node in walk_expressions(stmt):
+                if isinstance(node, ast.FormattedValue):
+                    if classify(node.value, env, ctx.imports) == TRACED:
+                        findings.append(self.finding(
+                            ctx, node,
+                            f"f-string interpolates a traced value in "
+                            f"'{info.qualname}' (prints the abstract tracer, "
+                            "not data; use jax.debug.print)"))
+                elif isinstance(node, ast.Call):
+                    name = dotted_name(node.func, ctx.imports)
+                    if name in _FORMATTERS and any(
+                            classify(a, env, ctx.imports) == TRACED
+                            for a in node.args):
+                        findings.append(self.finding(
+                            ctx, node,
+                            f"{name}() of a traced value in "
+                            f"'{info.qualname}' (use jax.debug.print for "
+                            "runtime values)"))
+            return findings
+        return _scan(ctx, on_stmt)
+
+
+TRACE_RULES = [HostSyncRule(), TracedBranchRule(), TracedFormatRule()]

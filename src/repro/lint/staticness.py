@@ -1,0 +1,317 @@
+"""Three-level staticness classifier for expressions in traced functions.
+
+Inside a jit-reachable function the trace-safety rules must distinguish
+values that are *trace-time Python* (shapes, config flags, loop-bound
+constants) from values that are *tracers* (array arguments and anything
+derived from them).  ``int(x.shape[1])`` is fine; ``int(logits)`` is a host
+sync.  A binary verdict would drown the rules in false positives, so every
+expression classifies to one of three levels:
+
+* ``STATIC``  -- known trace-time Python (never a tracer);
+* ``TRACED``  -- known (or presumed) tracer;
+* ``UNKNOWN`` -- cannot tell; rules stay silent.
+
+Rules only fire on ``TRACED``.  The environment maps local names to levels
+and is built per function:
+
+* parameters default to TRACED (a traced function's arguments are the
+  tracers) **except**: ``self``/``cls``; parameters whose annotation names a
+  static Python type (``int``, ``float``, ``bool``, ``str``, a ``*Config``
+  class, ``Callable`` ...); and keyword-only parameters of *kernel*
+  functions (Pallas kernels bind block sizes via ``functools.partial(...,
+  block_k=...)``, so kwonly == compile-time constant by construction);
+* closure variables inherit the enclosing function's environment, module
+  level is STATIC;
+* assignments propagate: ``y = x + 1`` is as traced as ``x``;
+  ``n = x.shape[0]`` is STATIC regardless of ``x``.
+
+Expressions that are static *regardless of their operands*: ``.shape`` /
+``.dtype`` / ``.ndim`` attributes, ``len(...)``, ``x is None`` /
+``x is not None`` comparisons, ``isinstance(...)``, string/None/number
+literals.
+"""
+from __future__ import annotations
+
+import ast
+
+from .callgraph import FunctionInfo, ModuleGraph, dotted_name
+
+STATIC = 0
+UNKNOWN = 1
+TRACED = 2
+
+#: annotation names whose parameters are trace-time Python values
+_STATIC_ANNOTATIONS = {
+    "int", "float", "bool", "str", "bytes", "tuple", "list", "dict", "set",
+    "type", "object", "Callable", "callable", "Sequence", "Mapping",
+    "Optional", "Any", "None",
+}
+
+#: attribute accesses that always yield static metadata
+_STATIC_ATTRS = {"shape", "dtype", "ndim", "size", "itemsize"}
+
+#: calls that always yield static values (metadata / type queries)
+_STATIC_CALLS = {
+    "len", "isinstance", "issubclass", "type", "id", "getattr", "hasattr",
+    "range", "zip", "enumerate", "sorted", "min", "max", "abs", "round",
+}
+
+#: dotted calls that always yield tracers from any input
+_TRACER_FACTORY_PREFIXES = ("jax.numpy.", "jax.lax.", "jax.nn.", "jax.random.")
+
+#: dotted calls that return host metadata even on tracers
+_STATIC_DOTTED_CALLS = {
+    "jax.numpy.ndim", "jax.numpy.shape", "jax.numpy.size",
+    "jax.numpy.isscalar", "jax.numpy.result_type", "jax.numpy.dtype",
+    "numpy.ndim", "numpy.shape", "numpy.size", "numpy.isscalar",
+    "numpy.result_type", "numpy.dtype",
+}
+
+
+def _annotation_is_static(ann: ast.expr | None) -> bool:
+    if ann is None:
+        return False
+    if isinstance(ann, ast.Constant):          # string annotation / None
+        return (isinstance(ann.value, str)
+                and _name_is_static(ann.value)) or ann.value is None
+    if isinstance(ann, ast.Name):
+        return _name_is_static(ann.id)
+    if isinstance(ann, ast.Attribute):
+        return _name_is_static(ann.attr)
+    if isinstance(ann, ast.Subscript):          # Optional[int], list[int] ...
+        return _annotation_is_static(ann.value)
+    if isinstance(ann, ast.BinOp) and isinstance(ann.op, ast.BitOr):
+        # PEP 604 unions: static if any side is a static scalar type --
+        # ``int | None`` parameters are config knobs, not tracers
+        return (_annotation_is_static(ann.left)
+                or _annotation_is_static(ann.right))
+    return False
+
+
+def _name_is_static(name: str) -> bool:
+    if name in _STATIC_ANNOTATIONS:
+        return True
+    # config/spec dataclasses are hyperparameter bags, never tracers
+    return name.endswith(("Config", "Spec", "Settings", "Options"))
+
+
+class Env:
+    """Chained name->level environment (function scope over closure scope)."""
+
+    def __init__(self, parent: "Env | None" = None):
+        self.parent = parent
+        self.names: dict[str, int] = {}
+
+    def get(self, name: str) -> int:
+        env: Env | None = self
+        while env is not None:
+            if name in env.names:
+                return env.names[name]
+            env = env.parent
+        return STATIC   # module level: imports, constants, classes
+
+    def set(self, name: str, level: int) -> None:
+        self.names[name] = level
+
+
+def param_env(info: FunctionInfo, parent: Env | None = None) -> Env:
+    """Seed an environment from a function's parameter list."""
+    env = Env(parent)
+    node = info.node
+    args = node.args
+    kernel = info.kernel_reachable
+
+    def classify_param(a: ast.arg, *, kwonly: bool) -> int:
+        if a.arg in ("self", "cls"):
+            return STATIC
+        if getattr(a, "annotation", None) is not None:
+            return STATIC if _annotation_is_static(a.annotation) else TRACED
+        if kwonly and kernel:
+            return STATIC   # partial-bound block sizes / flags
+        return TRACED
+
+    for a in args.posonlyargs + args.args:
+        env.set(a.arg, classify_param(a, kwonly=False))
+    for a in args.kwonlyargs:
+        env.set(a.arg, classify_param(a, kwonly=True))
+    if args.vararg:
+        env.set(args.vararg.arg, classify_param(args.vararg, kwonly=False))
+    if args.kwarg:
+        env.set(args.kwarg.arg, STATIC)   # **kwargs dict itself is host-side
+    return env
+
+
+def classify(node: ast.expr, env: Env, imports: dict[str, str]) -> int:
+    """Classify an expression as STATIC / UNKNOWN / TRACED."""
+    c = lambda n: classify(n, env, imports)   # noqa: E731
+
+    if isinstance(node, ast.Constant):
+        return STATIC
+    if isinstance(node, ast.Name):
+        return env.get(node.id)
+    if isinstance(node, ast.Attribute):
+        if node.attr in _STATIC_ATTRS:
+            return STATIC
+        base = c(node.value)
+        if base == STATIC:
+            return STATIC      # cfg.moe, self.decode_steps, np.float32 ...
+        return UNKNOWN         # tracer attribute? pytrees make this murky
+    if isinstance(node, ast.Subscript):
+        base = c(node.value)
+        if base == STATIC and isinstance(node.value, ast.Attribute) \
+                and node.value.attr in _STATIC_ATTRS:
+            return STATIC      # x.shape[0]
+        return base
+    if isinstance(node, ast.Compare):
+        if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+            return STATIC      # ``x is None`` is a trace-time identity test
+        return max(c(node.left), *(c(cmp) for cmp in node.comparators))
+    if isinstance(node, ast.BoolOp):
+        return max(c(v) for v in node.values)
+    if isinstance(node, ast.BinOp):
+        return max(c(node.left), c(node.right))
+    if isinstance(node, ast.UnaryOp):
+        return c(node.operand)
+    if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        if not node.elts:
+            return STATIC
+        return max(c(e) for e in node.elts)
+    if isinstance(node, ast.Dict):
+        vals = [c(v) for v in node.values if v is not None]
+        return max(vals) if vals else STATIC
+    if isinstance(node, ast.IfExp):
+        return max(c(node.body), c(node.orelse))
+    if isinstance(node, ast.Starred):
+        return c(node.value)
+    if isinstance(node, ast.JoinedStr):
+        return STATIC          # the *string* is host; TRC103 checks contents
+    if isinstance(node, (ast.ListComp, ast.SetComp, ast.GeneratorExp)):
+        return UNKNOWN
+    if isinstance(node, ast.Call):
+        name = dotted_name(node.func, imports)
+        if name in _STATIC_CALLS:
+            return STATIC
+        if name is not None:
+            if name in _STATIC_DOTTED_CALLS:
+                return STATIC
+            if name.startswith(_TRACER_FACTORY_PREFIXES):
+                return TRACED
+            if name in ("int", "float", "bool", "str", "tuple", "list",
+                        "dict"):
+                return STATIC  # result is host Python (TRC101 flags the call)
+        if isinstance(node.func, ast.Attribute):
+            # method on a value: x.astype(...), x.sum() keep x's level;
+            # metadata-ish methods are static
+            if node.func.attr in ("keys", "values", "items", "get", "copy"):
+                return c(node.func.value)
+            base = c(node.func.value)
+            if base == TRACED:
+                return TRACED
+        return UNKNOWN
+    return UNKNOWN
+
+
+class EnvBuilder:
+    """Walk a function's own statements in order, updating the environment.
+
+    Callers hand ``visit_stmt`` each top-level statement *before* running
+    their checks on it, so name levels reflect program order.  Nested
+    function definitions are skipped -- they are separate graph nodes and
+    get their own environment (seeded with this one as parent).
+    """
+
+    def __init__(self, env: Env, imports: dict[str, str]):
+        self.env = env
+        self.imports = imports
+
+    def _bind_target(self, target: ast.expr, level: int) -> None:
+        if isinstance(target, ast.Name):
+            self.env.set(target.id, level)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for el in target.elts:
+                self._bind_target(el, level)
+        elif isinstance(target, ast.Starred):
+            self._bind_target(target.value, level)
+        # attribute/subscript targets don't create local names
+
+    def visit_stmt(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, ast.Assign):
+            level = classify(stmt.value, self.env, self.imports)
+            for t in stmt.targets:
+                self._bind_target(t, level)
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            if _annotation_is_static(stmt.annotation):
+                level = STATIC
+            else:
+                level = classify(stmt.value, self.env, self.imports)
+            self._bind_target(stmt.target, level)
+        elif isinstance(stmt, ast.AugAssign):
+            level = max(classify(stmt.value, self.env, self.imports),
+                        classify(stmt.target, self.env, self.imports)
+                        if isinstance(stmt.target, ast.Name) else STATIC)
+            self._bind_target(stmt.target, level)
+        elif isinstance(stmt, ast.For):
+            it = classify(stmt.iter, self.env, self.imports)
+            self._bind_target(stmt.target, it)
+        elif isinstance(stmt, ast.With):
+            for item in stmt.items:
+                if item.optional_vars is not None:
+                    self._bind_target(item.optional_vars, UNKNOWN)
+        elif isinstance(stmt, (ast.Import, ast.ImportFrom)):
+            for a in stmt.names:
+                self.env.set(a.asname or a.name.split(".")[0], STATIC)
+        elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            self.env.set(stmt.name, STATIC)
+
+
+def function_statements(node, *, into_bodies: bool = True):
+    """Yield the function's own statements, not those of nested defs.
+
+    With ``into_bodies`` the walk descends into if/for/while/try/with
+    blocks (still skipping nested function/class bodies).
+    """
+    stack = list(node.body)
+    while stack:
+        stmt = stack.pop(0)
+        yield stmt
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef, ast.Lambda)):
+            continue
+        if into_bodies:
+            for field_name in ("body", "orelse", "finalbody", "handlers"):
+                block = getattr(stmt, field_name, None)
+                if not block:
+                    continue
+                for sub in block:
+                    if isinstance(sub, ast.ExceptHandler):
+                        stack.extend(sub.body)
+                    else:
+                        stack.append(sub)
+
+
+def walk_expressions(stmt: ast.stmt):
+    """Yield expression nodes of a statement without entering nested defs
+    or sub-statements (those come through ``function_statements``)."""
+    blocks = {"body", "orelse", "finalbody", "handlers"}
+    stack: list[ast.AST] = []
+    for field_name, value in ast.iter_fields(stmt):
+        if field_name in blocks and isinstance(stmt, (ast.If, ast.For,
+                                                      ast.While, ast.Try,
+                                                      ast.With)):
+            continue
+        if isinstance(value, ast.AST):
+            stack.append(value)
+        elif isinstance(value, list):
+            stack.extend(v for v in value if isinstance(v, ast.AST))
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda, ast.ClassDef)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+__all__ = ["STATIC", "UNKNOWN", "TRACED", "Env", "param_env", "classify",
+           "EnvBuilder", "function_statements", "walk_expressions",
+           "ModuleGraph"]

@@ -112,7 +112,6 @@ class ModelConfig:
             total += L * (per_ssm + 2 * d)
             total += per_attn + per_mlp + 2 * d
             return int(total)
-        n_blocks = L + self.n_enc_layers
         per_block = per_attn + per_mlp + 2 * d
         if self.n_enc_layers:   # decoder blocks also carry cross-attention
             per_block_dec = per_attn * 2 + per_mlp + 3 * d

@@ -269,6 +269,7 @@ def _remat(fn, cfg: ModelConfig):
     return jax.checkpoint(fn)
 
 
+# replint: traced -- jitted from the serving engine
 def forward(params, batch, cfg: ModelConfig, *, use_kernel: bool = False):
     """Full-sequence forward -> (logits (B,S,V) f32, aux)."""
     x = _embed_in(params, batch, cfg)
@@ -287,6 +288,7 @@ def forward(params, batch, cfg: ModelConfig, *, use_kernel: bool = False):
     return _lm_head(params, x, cfg), jnp.sum(auxs)
 
 
+# replint: traced -- jitted from the serving engine
 def loss_fn(params, batch, cfg: ModelConfig, *, use_kernel: bool = False):
     logits, aux = forward(params, batch, cfg, use_kernel=use_kernel)
     tgt = batch["targets"]
@@ -326,6 +328,7 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int):
     }
 
 
+# replint: traced -- jitted from the serving engine
 def prefill(params, batch, cfg: ModelConfig, max_len: int | None = None,
             *, use_kernel: bool = False, last_idx=None):
     """Run the prompt, return (last-position logits, cache dict).
@@ -367,6 +370,7 @@ def prefill(params, batch, cfg: ModelConfig, max_len: int | None = None,
     return logits, {"k": ks.astype(cfg.dtype), "v": vs.astype(cfg.dtype)}
 
 
+# replint: traced -- jitted from the serving engine
 def decode_step(params, cache, token, pos, cfg: ModelConfig, *,
                 block_table=None, use_kernel: bool = False):
     """token: (B, 1) int32 (or (B,1,d) embeds); pos: scalar int32 count of

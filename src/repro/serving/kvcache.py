@@ -39,6 +39,7 @@ TRASH_PAGE = 0
 # pure jit-side page ops
 # ---------------------------------------------------------------------------------
 
+# replint: traced -- jitted from the serving engine
 def paged_update(cache, new, block_table, pos):
     """Scatter one new token per batch row into the page pool.
 
@@ -55,6 +56,7 @@ def paged_update(cache, new, block_table, pos):
     return flat.reshape(cache.shape)
 
 
+# replint: traced -- jitted from the serving engine
 def paged_gather(cache, block_table):
     """Reconstruct the dense per-slot view from the page pool.
 
@@ -70,6 +72,7 @@ def paged_gather(cache, block_table):
     return flat[idx]
 
 
+# replint: traced -- jitted from the serving engine
 def write_prefill_pages(pages, cache, page_ids):
     """Scatter a batched prefill cache into the pool, page-chunked.
 
@@ -96,6 +99,7 @@ def write_prefill_pages(pages, cache, page_ids):
 # cache-ops: the write / view / mask contract block_decode consumes
 # ---------------------------------------------------------------------------------
 
+# replint: traced -- jitted from the serving engine
 def _vector_mask(seq_len, pos, window):
     """(B, Sq=1, S) validity mask for per-row positions -- shared by the dense
     vector path and the paged path so their semantics can never diverge."""

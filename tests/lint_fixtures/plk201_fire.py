@@ -1,0 +1,11 @@
+"""PLK201 fire fixture: kernel closes over a traced array."""
+import jax
+from jax.experimental import pallas as pl
+
+
+def launch(x, bias):
+    def kernel(x_ref, o_ref):
+        o_ref[...] = x_ref[...] + bias     # captured tracer, not a ref
+
+    return pl.pallas_call(
+        kernel, out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype))(x)

@@ -1,0 +1,21 @@
+"""PLK202 clean twin: the legal ref-index grammar (constants, slices,
+pl.ds, program_id-derived scalars, scalar arithmetic)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(s_ref, x_ref, o_ref, acc_scr, *, block_k):
+    b = pl.program_id(0)
+    length = s_ref[b]
+    acc_scr[...] = x_ref[pl.ds(0, block_k), :] * 1.0
+    o_ref[0, :] = acc_scr[length - 1, :]
+    o_ref[1:, :] = x_ref[: block_k - 1, :]
+
+
+def launch(lengths, x):
+    return pl.pallas_call(
+        functools.partial(_kernel, block_k=8),
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32))(lengths, x)

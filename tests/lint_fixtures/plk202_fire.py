@@ -1,0 +1,13 @@
+"""PLK202 fire fixture: data-dependent ref index."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, idx_ref, o_ref):
+    o_ref[...] = x_ref[jnp.argmax(idx_ref[...])]   # jnp expression as index
+
+
+def launch(x, idx):
+    return pl.pallas_call(
+        _kernel, out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype))(x, idx)

@@ -1,0 +1,12 @@
+"""PLK203 clean twin: distinct operands (repeated literals are fine)."""
+import jax
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = x_ref[...] + y_ref[...]
+
+
+def launch(x, y):
+    out = jax.ShapeDtypeStruct(x.shape, x.dtype)
+    return pl.pallas_call(_kernel, out_shape=out)(x, y)

@@ -1,0 +1,12 @@
+"""PLK203 fire fixture: same array passed twice to one pallas_call."""
+import jax
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = x_ref[...] + y_ref[...]
+
+
+def launch(x):
+    out = jax.ShapeDtypeStruct(x.shape, x.dtype)
+    return pl.pallas_call(_kernel, out_shape=out)(x, x)   # aliased operands

@@ -1,0 +1,20 @@
+"""PLK204 clean twin: blocks tile the literal out_shape exactly."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def launch(x):
+    block = 32
+    n = 128
+    return pl.pallas_call(
+        _kernel,
+        grid=(n // block, 1),
+        in_specs=[pl.BlockSpec((block, 128), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((block, 128), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, 128), jnp.float32),
+    )(x)

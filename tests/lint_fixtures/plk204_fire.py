@@ -1,0 +1,19 @@
+"""PLK204 fire fixture: literal out_shape not divisible by the block."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def launch(x):
+    block = 48
+    return pl.pallas_call(
+        _kernel,
+        grid=(4,),
+        in_specs=[pl.BlockSpec((block, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block, 128), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((100, 128), jnp.float32),   # 100 % 48
+    )(x)

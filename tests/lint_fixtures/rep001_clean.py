@@ -1,0 +1,5 @@
+"""REP001 clean twin: the suppression carries its reason."""
+
+
+def hijack(plan):
+    plan._pending = []  # replint: disable=CPL303 -- fixture: reasoned suppression

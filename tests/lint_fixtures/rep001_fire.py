@@ -1,0 +1,5 @@
+"""REP001 fire fixture: a suppression without a reason string."""
+
+
+def hijack(plan):
+    plan._pending = []  # replint: disable=CPL303

@@ -1,0 +1,5 @@
+"""REP002 clean twin: the suppression is actually used."""
+
+
+def hijack(plan):
+    plan._pending = []  # replint: disable=CPL303 -- fixture: suppression is used

@@ -1,0 +1,14 @@
+"""TRC101 clean twin: metadata coercions and host-side syncs are fine."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def hot(x):
+    n = int(x.shape[0])        # shapes are trace-time Python
+    y = jnp.asarray(x)         # device-side cast, no sync
+    return y * n
+
+
+def host(x):
+    return float(x)            # not jit-reachable: host code may sync

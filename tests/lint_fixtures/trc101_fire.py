@@ -1,0 +1,10 @@
+"""TRC101 fire fixture: host syncs on traced values in a jitted function."""
+import jax
+import numpy as np
+
+
+@jax.jit
+def hot(x):
+    n = int(x)                 # coercion concretizes the tracer
+    a = np.asarray(x)          # numpy materializes the device array
+    return x.item() + n + a.sum()

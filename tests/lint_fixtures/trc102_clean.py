@@ -1,0 +1,14 @@
+"""TRC102 clean twin: static branches and device-side selects."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def hot(x, scale: float = 2.0, y=None):
+    if scale > 1.0:                 # config knob: trace-time Python
+        x = x * scale
+    if x.shape[0] > 1:              # shapes are static
+        x = x + 1
+    if y is None:                   # identity test never syncs
+        y = jnp.zeros_like(x)
+    return jnp.where(x > 0, x, -x) + y

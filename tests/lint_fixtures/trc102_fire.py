@@ -1,0 +1,13 @@
+"""TRC102 fire fixture: Python branch on a traced operand in a scan body."""
+import jax
+import jax.numpy as jnp
+
+
+def step(carry, tok):
+    if tok > 0:                # Python `if` concretizes the tracer
+        carry = carry + tok
+    return carry, carry
+
+
+def run(tokens):
+    return jax.lax.scan(step, jnp.zeros(()), tokens)

@@ -1,0 +1,14 @@
+"""TRC103 clean twin: jax.debug.print and static f-strings."""
+import jax
+
+
+@jax.jit
+def hot(x, label: str = "x"):
+    jax.debug.print("value={v}", v=x)          # staged, prints real data
+    note = f"tensor {label} rank {x.ndim}"     # static metadata only
+    return x, note
+
+
+def host(x):
+    print(x)                                   # host code prints freely
+    return x

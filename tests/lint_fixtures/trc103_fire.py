@@ -1,0 +1,9 @@
+"""TRC103 fire fixture: printing / formatting tracers inside jit."""
+import jax
+
+
+@jax.jit
+def hot(x):
+    print(x)                   # prints the abstract tracer, not data
+    msg = f"value={x}"         # f-string interpolates the tracer
+    return x, msg

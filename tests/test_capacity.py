@@ -446,11 +446,12 @@ def test_landing_overflow_is_metered_not_silently_dropped():
     assert plan.pending_of("od") == 0              # overflow didn't linger
 
 
-def _meters_conserve(plan, name):
+def _meters_conserve(plan, name, starting):
+    """starting: per-pool live counts captured right after construction
+    (initial allocation is not tracked by the meters)."""
     st_, m = plan.stats()[name], plan.meters()[name]
-    starting = plan._state[name].pool.min_units    # not tracked by meters
     return (st_.units, st_.pending) == (
-        plan._starting.get(name, 0) + m.landed - m.released - m.revoked
+        starting.get(name, 0) + m.landed - m.released - m.revoked
         - m.lost,
         m.queued - m.landed - m.cancelled - m.overflow_landed)
 
@@ -473,7 +474,7 @@ def test_capacity_meters_conserve_under_random_interleavings(ops, seed):
         pools, starting_units=3,
         faults=FaultInjector((FaultSpec(loss_rate=1 / 60.0, stuck_p=0.25,
                                         flap_rate=1 / 80.0, seed=seed),)))
-    plan._starting = {n: plan.live_of(n) for n in ("od", "spot")}
+    starting = {n: plan.live_of(n) for n in ("od", "spot")}
     names = ("od", "spot")
     t = 0.0
     for op, arg in ops:
@@ -490,14 +491,15 @@ def test_capacity_meters_conserve_under_random_interleavings(ops, seed):
         else:
             plan.replace_unhealthy(name, arg, now=t)
         for n in names:
-            assert _meters_conserve(plan, n), (op, arg, t, plan.meters()[n])
+            assert _meters_conserve(plan, n, starting), \
+                (op, arg, t, plan.meters()[n])
             s = plan.stats()[n]
             assert 0 <= s.units <= plan._state[n].pool.max_units
             assert s.pending >= 0 and s.unhealthy <= s.units
         t += 1.0
     plan.land(t + 100.0)                           # drain all pending
     for n in names:
-        assert _meters_conserve(plan, n)
+        assert _meters_conserve(plan, n, starting)
 
 
 def test_capacity_meters_conserve_seeded_fuzz():
@@ -515,7 +517,7 @@ def test_capacity_meters_conserve_seeded_fuzz():
             pools, starting_units=3,
             faults=FaultInjector((FaultSpec(loss_rate=1 / 60.0, stuck_p=0.25,
                                             flap_rate=1 / 80.0, seed=seed),)))
-        plan._starting = {n: plan.live_of(n) for n in ("od", "spot")}
+        starting = {n: plan.live_of(n) for n in ("od", "spot")}
         t = 0.0
         for op, arg in zip(rng.integers(0, 5, 60), rng.integers(0, 7, 60)):
             name = ("od", "spot")[int(arg) % 2]
@@ -531,8 +533,8 @@ def test_capacity_meters_conserve_seeded_fuzz():
             else:
                 plan.replace_unhealthy(name, int(arg), now=t)
             for n in ("od", "spot"):
-                assert _meters_conserve(plan, n), (seed, op, arg, t)
+                assert _meters_conserve(plan, n, starting), (seed, op, arg, t)
             t += 1.0
         plan.land(t + 100.0)
         for n in ("od", "spot"):
-            assert _meters_conserve(plan, n), seed
+            assert _meters_conserve(plan, n, starting), seed

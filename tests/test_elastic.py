@@ -50,7 +50,6 @@ def test_cluster_completes_all_requests():
 
 
 def test_appdata_preprovisions_on_output_signal():
-    reqs = _requests(3000)
     cfg = ClusterConfig()
     base = ElasticCluster(cfg, ThresholdPolicy(0.7), _requests(3000))
     r_thr = base.run()

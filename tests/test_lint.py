@@ -1,0 +1,365 @@
+"""Tests for the replint static-analysis engine (src/repro/lint).
+
+Covers: the rule corpus (every rule fires on its fixture and stays silent
+on the clean twin), suppression handling (reasoned, reasonless, unused,
+ALL), call-graph jit-reachability (direct jax.jit, via functools.partial,
+via self.method, via lax bodies, via the `# replint: traced` marker), the
+staticness classifier's judgment calls, and the CLI/JSON surface that
+scripts/check.sh and CI rely on."""
+
+import ast
+import json
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.lint import lint_paths
+from repro.lint.callgraph import build_graph, build_imports
+from repro.lint.engine import build_context, parse_comments
+from repro.lint.rules import ALL_RULES, get_rule
+from repro.lint.selftest import SELFTEST_IDS, check_rule
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _lint_src(tmp_path, source, name="mod.py", **kw):
+    f = tmp_path / name
+    f.write_text(textwrap.dedent(source))
+    kw.setdefault("respect_scope", False)
+    return lint_paths([str(f)], root=tmp_path, **kw)
+
+
+def _rules_of(report):
+    return [f.rule for f in report.findings]
+
+
+# ---------------------------------------------------------------------------------
+# rule corpus
+# ---------------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rule_id", SELFTEST_IDS)
+def test_rule_corpus(rule_id):
+    """Every rule fires on its *_fire.py fixture and is silent on the
+    *_clean.py twin."""
+    assert check_rule(rule_id, REPO) == []
+
+
+def test_every_rule_has_an_id_and_description():
+    ids = [r.id for r in ALL_RULES]
+    assert len(ids) == len(set(ids))
+    for r in ALL_RULES:
+        assert r.description and r.name
+    assert get_rule("TRC101") is get_rule("host-sync")
+
+
+# ---------------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------------
+
+def test_reasoned_suppression_silences_finding(tmp_path):
+    report = _lint_src(tmp_path, """
+        def f(plan):
+            plan._x = 1  # replint: disable=CPL303 -- test: exercising the API
+        """)
+    assert report.findings == []
+    assert [f.rule for f in report.suppressed] == ["CPL303"]
+    assert report.suppressed[0].reason == "test: exercising the API"
+
+
+def test_reasonless_suppression_is_itself_a_finding(tmp_path):
+    report = _lint_src(tmp_path, """
+        def f(plan):
+            plan._x = 1  # replint: disable=CPL303
+        """)
+    assert _rules_of(report) == ["REP001"]          # CPL303 still suppressed
+    assert [f.rule for f in report.suppressed] == ["CPL303"]
+
+
+def test_unused_suppression_is_flagged(tmp_path):
+    report = _lint_src(tmp_path, """
+        def f():
+            return 1  # replint: disable=TRC101 -- nothing syncs here
+        """)
+    assert _rules_of(report) == ["REP002"]
+
+
+def test_own_line_suppression_covers_next_line(tmp_path):
+    report = _lint_src(tmp_path, """
+        def f(plan):
+            # replint: disable=CPL303 -- test: next-line form
+            plan._x = 1
+        """)
+    assert report.findings == []
+    assert [f.rule for f in report.suppressed] == ["CPL303"]
+
+
+def test_suppression_matches_by_name_and_all(tmp_path):
+    by_name = _lint_src(tmp_path, """
+        def f(plan):
+            plan._x = 1  # replint: disable=private-mutation -- test: by name
+        """)
+    assert by_name.findings == []
+    by_all = _lint_src(tmp_path, """
+        def f(plan):
+            plan._x = 1  # replint: disable=ALL -- test: blanket
+        """, name="all.py")
+    assert by_all.findings == []
+
+
+def test_suppression_does_not_leak_to_other_lines(tmp_path):
+    report = _lint_src(tmp_path, """
+        def f(plan):
+            plan._x = 1  # replint: disable=CPL303 -- test: this line only
+            plan._y = 2
+        """)
+    assert _rules_of(report) == ["CPL303"]
+    assert report.findings[0].line == 4
+
+
+# ---------------------------------------------------------------------------------
+# call-graph jit-reachability
+# ---------------------------------------------------------------------------------
+
+def _graph_of(source):
+    tree = ast.parse(textwrap.dedent(source))
+    return build_graph(tree, build_imports(tree))
+
+
+def _reachable(source):
+    g = _graph_of(source)
+    return {f.qualname for f in g.jit_reachable_functions()}
+
+
+def test_reachability_direct_jit():
+    names = _reachable("""
+        import jax
+
+        def helper(x):
+            return x + 1
+
+        @jax.jit
+        def hot(x):
+            return helper(x)
+
+        def cold(x):
+            return x
+        """)
+    assert names == {"hot", "helper"}
+
+
+def test_reachability_via_functools_partial():
+    names = _reachable("""
+        import functools
+        import jax
+
+        def body(step, x):
+            return x * step
+
+        def run(x):
+            fn = jax.jit(functools.partial(body, 2))
+            return fn(x)
+        """)
+    assert "body" in names
+
+
+def test_reachability_via_method():
+    names = _reachable("""
+        import jax
+
+        class Engine:
+            def _step(self, x):
+                return self._inner(x)
+
+            def _inner(self, x):
+                return x + 1
+
+            def __init__(self):
+                self.fn = jax.jit(self._step)
+        """)
+    assert {"Engine._step", "Engine._inner"} <= names
+
+
+def test_reachability_via_lax_bodies_and_alias():
+    names = _reachable("""
+        from jax import lax
+
+        def cond(c):
+            return c[0] < 10
+
+        def body(c):
+            return c
+
+        def run(x):
+            step = body
+            return lax.while_loop(cond, step, (x,))
+        """)
+    assert {"cond", "body"} <= names
+
+
+def test_reachability_via_traced_marker():
+    src = textwrap.dedent("""
+        # replint: traced -- jitted by a caller in another module
+        def entry(x):
+            return helper(x)
+
+        def helper(x):
+            return x + 1
+        """)
+    tree = ast.parse(src)
+    _, traced = parse_comments(src)
+    g = build_graph(tree, build_imports(tree), traced)
+    names = {f.qualname for f in g.jit_reachable_functions()}
+    assert names == {"entry", "helper"}
+
+
+def test_kernel_reachability_from_pallas_call():
+    g = _graph_of("""
+        import jax
+        from jax.experimental import pallas as pl
+
+        def _kernel(x_ref, o_ref):
+            o_ref[...] = x_ref[...]
+
+        def launch(x):
+            return pl.pallas_call(
+                _kernel,
+                out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype))(x)
+        """)
+    kernels = {f.qualname for f in g.kernel_functions()}
+    assert kernels == {"_kernel"}
+    assert len(g.pallas_sites) == 1
+    outer, inner, kernel, _scope = g.pallas_sites[0]
+    assert kernel.qualname == "_kernel"
+    assert outer is not None and inner is not None
+
+
+# ---------------------------------------------------------------------------------
+# staticness judgment calls (regression-pins for the real tree)
+# ---------------------------------------------------------------------------------
+
+def test_shape_coercion_is_not_a_host_sync(tmp_path):
+    report = _lint_src(tmp_path, """
+        import jax
+
+        @jax.jit
+        def hot(x):
+            n = int(x.shape[0])
+            return x * n
+        """)
+    assert report.findings == []
+
+
+def test_config_branches_are_static(tmp_path):
+    report = _lint_src(tmp_path, """
+        import jax
+
+        @jax.jit
+        def hot(x, cfg: ModelConfig, n_layers: int = 4, extra=None):
+            if cfg.moe:
+                x = x + 1
+            for _ in range(n_layers):
+                x = x * 2
+            if extra is None:
+                return x
+            return x + extra
+        """)
+    assert report.findings == []
+
+
+def test_kernel_kwonly_params_are_static(tmp_path):
+    report = _lint_src(tmp_path, """
+        import functools
+        import jax
+        from jax.experimental import pallas as pl
+
+        def _kernel(x_ref, o_ref, *, block_k):
+            if block_k > 8:
+                o_ref[...] = x_ref[...]
+
+        def launch(x):
+            return pl.pallas_call(
+                functools.partial(_kernel, block_k=16),
+                out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype))(x)
+        """)
+    assert report.findings == []
+
+
+def test_traced_branch_detected_through_assignment(tmp_path):
+    report = _lint_src(tmp_path, """
+        import jax
+
+        @jax.jit
+        def hot(x):
+            y = x + 1
+            if y > 0:
+                return y
+            return -y
+        """)
+    assert _rules_of(report) == ["TRC102"]
+
+
+# ---------------------------------------------------------------------------------
+# engine surface: discovery, JSON, exit codes, CLI
+# ---------------------------------------------------------------------------------
+
+def test_fixture_corpus_is_excluded_by_default():
+    report = lint_paths(["tests"], root=REPO)
+    assert not any("lint_fixtures" in f.path for f in report.findings)
+
+
+def test_json_report_roundtrip(tmp_path):
+    report = _lint_src(tmp_path, """
+        def f(plan):
+            plan._x = 1
+        """)
+    out = tmp_path / "report.json"
+    report.write_json(out)
+    data = json.loads(out.read_text())
+    assert data["tool"] == "replint"
+    assert data["n_findings"] == 1
+    assert data["counts"] == {"CPL303": 1}
+    assert data["findings"][0]["rule"] == "CPL303"
+    assert report.exit_code == 1
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    from repro.lint.__main__ import main
+    bad = tmp_path / "bad.py"
+    bad.write_text("def f(plan):\n    plan._x = 1\n")
+    good = tmp_path / "good.py"
+    good.write_text("def f():\n    return 1\n")
+    assert main([str(bad), "--root", str(tmp_path), "--no-scope"]) == 1
+    assert main([str(good), "--root", str(tmp_path), "--no-scope"]) == 0
+    out = capsys.readouterr().out
+    assert "CPL303" in out and "replint:" in out
+
+
+def test_select_limits_rules_and_skips_meta(tmp_path):
+    report = _lint_src(tmp_path, """
+        import time
+
+        def decide():
+            return time.time()  # wall clock
+
+        def other():
+            return 1  # replint: disable=TRC102 -- unrelated, must not REP002
+        """, select=("CPL301",))
+    assert _rules_of(report) == ["CPL301"]
+
+
+def test_real_tree_is_clean():
+    """The acceptance gate: the repo lints clean (suppressions allowed)."""
+    report = lint_paths(["src", "tests", "benchmarks"], root=REPO)
+    assert report.findings == [], "\n".join(
+        f"{f.location()} {f.rule}: {f.message}" for f in report.findings)
+    for f in report.suppressed:
+        assert f.reason, f"reasonless suppression at {f.location()}"
+
+
+def test_context_parses_syntax_error_file(tmp_path):
+    f = tmp_path / "broken.py"
+    f.write_text("def broken(:\n")
+    report = lint_paths([str(f)], root=tmp_path, respect_scope=False)
+    assert _rules_of(report) == ["REP000"]
+    assert build_context(f, "broken.py") is None
