@@ -45,7 +45,11 @@ python -m pytest -x -q
 
 if [[ "$FAST" == "1" ]]; then
   echo
-  echo "check.sh: FAST OK (lint + pytest; benchmark smoke skipped)"
+  echo "== smoke: serving engine quick (perf gates: 1.5x tokens/s floor, bursty"
+  echo "==        TTFT, single mixed trace; writes BENCH_serving.json) =="
+  timeout 300 env BENCH_QUICK=1 python -m benchmarks.serving_engine
+  echo
+  echo "check.sh: FAST OK (lint + pytest + quick serving bench)"
   exit 0
 fi
 
@@ -54,8 +58,8 @@ echo "== smoke: benchmarks =="
 python -m benchmarks.run --smoke
 
 echo
-echo "== smoke: serving engine (trace-count gates + tokens/s floor vs the"
-echo "==        pre-device-resident-loop baseline; writes BENCH_serving.json) =="
+echo "== smoke: serving engine (trace-count gates + tokens/s and bursty-TTFT"
+echo "==        floors vs the pre-overlap baseline; writes BENCH_serving.json) =="
 timeout 300 python -m benchmarks.run --smoke --only serving_engine
 
 echo

@@ -29,10 +29,21 @@ import numpy as np
 #: (32, 128) is the f32 minimum tile, so 16-token pages waste half of every
 #: sublane; the CPU gather path is page-size-insensitive above 16, where the
 #: free-list granularity argument wins.
+#: ``chunk_size`` (prefill tokens folded into one mixed step per row),
+#: ``draft_len`` (speculative tokens proposed per row per step), and
+#: ``lmhead_block_v`` (vocab tile of the fused lm-head epilogue; 0 = single
+#: fused matmul, the right call off-TPU) were seeded from the mixed-step
+#: sweep (``sweep_span_width``).  Bigger chunks finish prefill in fewer
+#: steps but inflate every mixed step's span width (decode rows pay the
+#: padding); more drafts amortize the per-step fixed cost but waste
+#: verifier FLOPs once the acceptance rate tails off.
 DEFAULTS = {
-    "cpu": {"page_size": 16, "block_k": 256},
-    "tpu": {"page_size": 32, "block_k": 512},
-    "gpu": {"page_size": 16, "block_k": 256},
+    "cpu": {"page_size": 16, "block_k": 256,
+            "chunk_size": 16, "draft_len": 3, "lmhead_block_v": 0},
+    "tpu": {"page_size": 32, "block_k": 512,
+            "chunk_size": 32, "draft_len": 3, "lmhead_block_v": 2048},
+    "gpu": {"page_size": 16, "block_k": 256,
+            "chunk_size": 16, "draft_len": 3, "lmhead_block_v": 2048},
 }
 
 
@@ -46,6 +57,18 @@ def default_page_size(be: str | None = None) -> int:
 
 def default_block_k(be: str | None = None) -> int:
     return DEFAULTS.get(be or backend(), DEFAULTS["cpu"])["block_k"]
+
+
+def default_chunk_size(be: str | None = None) -> int:
+    return DEFAULTS.get(be or backend(), DEFAULTS["cpu"])["chunk_size"]
+
+
+def default_draft_len(be: str | None = None) -> int:
+    return DEFAULTS.get(be or backend(), DEFAULTS["cpu"])["draft_len"]
+
+
+def default_lmhead_block_v(be: str | None = None) -> int:
+    return DEFAULTS.get(be or backend(), DEFAULTS["cpu"])["lmhead_block_v"]
 
 
 def _time_jitted(fn, *args, reps: int = 10) -> float:
@@ -167,13 +190,63 @@ def sweep_block_k(block_ks=(128, 256, 512, 1024), *, S: int = 1024,
     return rows
 
 
-def pick_defaults(page_rows: list[dict], block_rows: list[dict]) -> dict:
+def sweep_span_width(widths=(1, 2, 4, 8, 16, 32), *, total_tokens: int = 256,
+                     B: int = 4, Hq: int = 8, Hkv: int = 2, D: int = 64,
+                     page_size: int | None = None, reps: int = 10) -> list[dict]:
+    """Time one mixed-span attention step per query width T.
+
+    ``us_per_token = us_per_step / T`` is the quantity chunk-size and
+    draft-length trade against: a chunk of C tokens costs one T = C mixed
+    row-step instead of C decode steps, and a draft of d tokens costs one
+    T = d + 1 verify instead of up to d + 1 steps -- but only pays off while
+    per-token cost still falls with T.
+    """
+    from repro.models.attention import sdpa
+    from repro.serving.kvcache import _span_mask, paged_gather
+
+    ps = page_size or default_page_size()
+    rng = jax.random.key(2)
+    rows = []
+    for T in widths:
+        q1, k_pages, v_pages, tbl, lengths = _paged_inputs(
+            rng, ps, total_tokens=total_tokens, B=B, Hq=Hq, Hkv=Hkv, D=D)
+        q = jnp.broadcast_to(q1, (B, T, Hq, D))
+        starts = lengths - T
+        if backend() == "cpu":
+            def step(q, kp, vp, tbl, st):
+                k = paged_gather(kp, tbl)
+                v = paged_gather(vp, tbl)
+                mask = _span_mask(k.shape[1], st, q.shape[1], jnp.int32(-1))
+                return sdpa(q, k, v, mask)
+        else:
+            from repro.kernels.decode_attention.ops import decode_attention_mixed
+
+            def step(q, kp, vp, tbl, st):
+                return decode_attention_mixed(q, kp, vp, tbl, st)
+        us = _time_jitted(jax.jit(step), q, k_pages, v_pages, tbl, starts,
+                          reps=reps)
+        rows.append({"span_width": int(T), "us_per_step": us,
+                     "us_per_token": us / T, "backend": backend()})
+    return rows
+
+
+def pick_defaults(page_rows: list[dict], block_rows: list[dict],
+                  span_rows: list[dict] | None = None) -> dict:
     """Reduce sweeps to the fastest configuration (the autotuned default)."""
     best_ps = min(page_rows, key=lambda r: r["us_per_step"])
     best_bk = min(block_rows, key=lambda r: r["us_per_step"])
-    return {"backend": backend(), "page_size": best_ps["page_size"],
-            "block_k": best_bk["block_k"]}
+    out = {"backend": backend(), "page_size": best_ps["page_size"],
+           "block_k": best_bk["block_k"]}
+    if span_rows:
+        # widest span still paying for itself in per-token cost is the chunk
+        # size; drafts stop at the knee less one (the verify block is d + 1)
+        best_span = min(span_rows, key=lambda r: r["us_per_token"])
+        out["chunk_size"] = best_span["span_width"]
+        out["draft_len"] = max(best_span["span_width"] - 1, 1)
+    return out
 
 
 __all__ = ["DEFAULTS", "backend", "default_page_size", "default_block_k",
-           "sweep_page_size", "sweep_block_k", "pick_defaults"]
+           "default_chunk_size", "default_draft_len", "default_lmhead_block_v",
+           "sweep_page_size", "sweep_block_k", "sweep_span_width",
+           "pick_defaults"]

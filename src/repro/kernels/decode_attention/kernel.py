@@ -164,6 +164,127 @@ def _paged_dec_kernel(tbl_ref, len_ref, win_ref, q_ref, k_ref, v_ref, *rest,
         o_ref[0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
 
 
+def _paged_mixed_kernel(tbl_ref, start_ref, win_ref, q_ref, k_ref, v_ref, *rest,
+                        page_size: int, group: int, sm_scale: float,
+                        q_len: int, int8: bool = False):
+    """Mixed-span block-table flash attention: each row carries ``q_len``
+    queries at consecutive logical positions ``start[b] + t`` -- prefill
+    chunks, speculative verify blocks, and plain decode (q_len == 1) are the
+    same kernel.  Query ``t`` attends keys ``k <= start[b] + t`` (per-query
+    causal), minus the sliding window; the T = 1 slice reduces exactly to
+    :func:`_paged_dec_kernel` with ``length = start + 1``."""
+    if int8:
+        ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        ks_ref = vs_ref = None
+        o_ref, m_scr, l_scr, acc_scr = rest
+    b = pl.program_id(0)
+    pi = pl.program_id(1)
+    npg = pl.num_programs(1)
+    start = start_ref[b]    # logical position of this row's first query
+    window = win_ref[0]
+
+    @pl.when(pi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    k_start = pi * page_size
+    # the page is live if ANY query can see ANY of its keys; per-query
+    # masking below handles the rest
+    live = k_start < start + q_len
+    live &= jnp.where(window > 0, k_start + page_size - 1 >= start + 1 - window,
+                      True)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * sm_scale           # (T, Hq, d)
+        k = k_ref[0].astype(jnp.float32)                      # (ps, Hkv, d)
+        v = v_ref[0].astype(jnp.float32)
+        if int8:
+            k = k * ks_ref[0]                                 # (ps, Hkv, 1)
+            v = v * vs_ref[0]
+        kr = jnp.repeat(k, group, axis=1)                     # (ps, Hq, d)
+        s = jnp.einsum("thd,phd->thp", q, kr)                 # (T, Hq, ps)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+        q_pos = start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        valid = k_pos <= q_pos
+        valid &= jnp.where(window > 0, k_pos > q_pos - window, True)
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_scr[...]                                   # (T, Hq)
+        m_cur = jnp.maximum(m_prev, s.max(axis=2))
+        alpha = jnp.exp(m_prev - m_cur)
+        # explicit zero where invalid: a query whose window starts past this
+        # whole (block-live) page still has m == NEG_INF, and exp(s - m)
+        # would be exp(0) garbage for its masked lanes
+        p = jnp.where(valid, jnp.exp(s - m_cur[:, :, None]), 0.0)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=2)
+        vr = jnp.repeat(v, group, axis=1)                     # (ps, Hq, d)
+        acc_scr[...] = (acc_scr[...] * alpha[:, :, None]
+                        + jnp.einsum("thp,phd->thd", p, vr))
+        m_scr[...] = m_cur
+
+    @pl.when(pi == npg - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom[:, :, None]).astype(o_ref.dtype)
+
+
+def paged_mixed_attention_fwd(q, k_pages, v_pages, block_table, starts,
+                              window, *, k_scale=None, v_scale=None,
+                              interpret: bool = False):
+    """q: (B, T, Hq, D) -- T queries per row at logical positions
+    ``starts[b] + t``; pages: (P, page_size, Hkv, D); block_table: (B, n)
+    int32; starts: (B,) int32; window: (1,) int32, -1 = unlimited.
+
+    Per-query causal attention over each row's own pages; the KV for the
+    span itself must already be written (query t attends its own key).
+    Returns (B, T, Hq, D).
+    """
+    B, T, Hq, D = q.shape
+    page_size, Hkv = k_pages.shape[1], k_pages.shape[2]
+    n_pages = block_table.shape[1]
+    group = Hq // Hkv
+    int8 = k_scale is not None
+
+    kernel = functools.partial(_paged_mixed_kernel, page_size=page_size,
+                               group=group, sm_scale=D ** -0.5, q_len=T,
+                               int8=int8)
+    page_spec = pl.BlockSpec((1, page_size, Hkv, D),
+                             lambda b, pi, tbl, st, win: (tbl[b, pi], 0, 0, 0))
+    in_specs = [
+        pl.BlockSpec((1, T, Hq, D), lambda b, pi, tbl, st, win: (b, 0, 0, 0)),
+        page_spec,
+        page_spec,
+    ]
+    inputs = [q, k_pages, v_pages]
+    if int8:
+        scale_spec = pl.BlockSpec(
+            (1, page_size, Hkv, 1),
+            lambda b, pi, tbl, st, win: (tbl[b, pi], 0, 0, 0))
+        in_specs += [scale_spec, scale_spec]
+        inputs += [k_scale, v_scale]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, n_pages),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, T, Hq, D),
+                               lambda b, pi, tbl, st, win: (b, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((T, Hq), jnp.float32),
+            pltpu.VMEM((T, Hq), jnp.float32),
+            pltpu.VMEM((T, Hq, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, T, Hq, D), q.dtype),
+        interpret=interpret,
+    )(block_table, starts, window, *inputs)
+
+
 def paged_decode_attention_fwd(q, k_pages, v_pages, block_table, lengths,
                                window, *, k_scale=None, v_scale=None,
                                interpret: bool = False):

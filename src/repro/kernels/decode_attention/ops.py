@@ -7,6 +7,7 @@ import jax.numpy as jnp
 from repro.kernels.decode_attention.kernel import (
     decode_attention_fwd,
     paged_decode_attention_fwd,
+    paged_mixed_attention_fwd,
 )
 
 
@@ -54,4 +55,25 @@ def decode_attention_paged(q1, k_pages, v_pages, block_table, lengths, *,
     return out[:, None]
 
 
-__all__ = ["decode_attention", "decode_attention_paged"]
+# replint: traced -- jitted from the serving engine mixed step
+def decode_attention_mixed(q, k_pages, v_pages, block_table, starts, *,
+                           window=None, k_scale=None, v_scale=None):
+    """Mixed-span block-table attention over a paged KV pool.
+
+    q: (B, T, Hq, D) -- T consecutive queries per row, the first at logical
+    position ``starts[b]`` (so a decode row has T == 1 and
+    ``starts == pos``, a prefill chunk has T == chunk_size, a speculative
+    verify block T == 1 + draft_len); pages / block_table / scales as in
+    :func:`decode_attention_paged`.  The span's own KV must be written
+    before the call.  Returns (B, T, Hq, D).
+    """
+    win = jnp.reshape(jnp.asarray(-1 if window is None else window, jnp.int32),
+                      (1,))
+    return paged_mixed_attention_fwd(
+        q, k_pages, v_pages, jnp.asarray(block_table, jnp.int32),
+        jnp.asarray(starts, jnp.int32), win, k_scale=k_scale, v_scale=v_scale,
+        interpret=_interpret())
+
+
+__all__ = ["decode_attention", "decode_attention_paged",
+           "decode_attention_mixed"]

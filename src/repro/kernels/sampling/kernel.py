@@ -92,3 +92,85 @@ def greedy_epilogue_fwd(logits, *, block_v: int = 2048,
         interpret=interpret,
     )(logits)
     return tok, lp
+
+
+def _lmhead_epilogue_kernel(h_ref, w_ref, tok_ref, lp_ref,
+                            m_scr, l_scr, bv_scr, bi_scr,
+                            *, block_v: int, total_v: int):
+    """Fused lm-head + greedy epilogue: the (1, block_v) logits tile is
+    computed in-register from the hidden row and one vocab block of the
+    weight matrix, then folded into the same running
+    (max, logsumexp, best-value, best-index) stats as
+    :func:`_epilogue_kernel` -- the (B, V) logits tensor never exists, not
+    even as a kernel input."""
+    vi = pl.program_id(1)
+    nv = pl.num_programs(1)
+
+    @pl.when(vi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        bv_scr[...] = jnp.full_like(bv_scr, NEG_INF)
+        bi_scr[...] = jnp.zeros_like(bi_scr)
+
+    h = h_ref[...].astype(jnp.float32)                        # (1, d)
+    w = w_ref[...].astype(jnp.float32)                        # (d, block_v)
+    x = h @ w                                                 # (1, block_v)
+    idx = vi * block_v + jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    x = jnp.where(idx < total_v, x, NEG_INF)
+    bmax = x.max(axis=-1)
+    barg = jnp.argmax(x, axis=-1).astype(jnp.int32)
+    better = bmax > bv_scr[...]
+    bv_scr[...] = jnp.where(better, bmax, bv_scr[...])
+    bi_scr[...] = jnp.where(better, vi * block_v + barg, bi_scr[...])
+    m_prev = m_scr[...]
+    m_cur = jnp.maximum(m_prev, bmax)
+    l_scr[...] = (l_scr[...] * jnp.exp(m_prev - m_cur)
+                  + jnp.exp(x - m_cur[:, None]).sum(axis=-1))
+    m_scr[...] = m_cur
+
+    @pl.when(vi == nv - 1)
+    def _finalize():
+        lse = m_scr[...] + jnp.log(jnp.maximum(l_scr[...], 1e-30))
+        tok_ref[...] = bi_scr[...]
+        lp_ref[...] = bv_scr[...] - lse
+
+
+def lmhead_epilogue_fwd(h, w, *, block_v: int = 2048,
+                        interpret: bool = False):
+    """h: (N, d) hidden rows; w: (d, V) lm-head weight.
+
+    Returns (token (N,) int32, logprob (N,) f32) -- argmax of ``h @ w`` and
+    its log-probability, streaming vocab blocks of ``w`` through VMEM so no
+    (N, V) logits tensor is materialized.  ``N`` is whatever the caller
+    flattened: B decode rows or B*T verify positions.
+    """
+    N, d = h.shape
+    V = w.shape[1]
+    block_v = min(block_v, V)
+    nv = pl.cdiv(V, block_v)              # last block masks its overhang
+
+    kernel = functools.partial(_lmhead_epilogue_kernel,
+                               block_v=block_v, total_v=V)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=0,
+        grid=(N, nv),
+        in_specs=[pl.BlockSpec((1, d), lambda n, vi: (n, 0)),
+                  pl.BlockSpec((d, block_v), lambda n, vi: (0, vi))],
+        out_specs=[pl.BlockSpec((1,), lambda n, vi: (n,)),
+                   pl.BlockSpec((1,), lambda n, vi: (n,))],
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.int32),
+        ],
+    )
+    tok, lp = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((N,), jnp.int32),
+                   jax.ShapeDtypeStruct((N,), jnp.float32)],
+        interpret=interpret,
+    )(h, w)
+    return tok, lp

@@ -16,7 +16,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.sampling.kernel import greedy_epilogue_fwd
+from repro.kernels.sampling.kernel import (NEG_INF, greedy_epilogue_fwd,
+                                           lmhead_epilogue_fwd)
 
 
 def _interpret() -> bool:
@@ -40,4 +41,66 @@ def greedy_epilogue(logits, *, use_kernel: bool = False, block_v: int = 2048):
     return tok, m - lse
 
 
-__all__ = ["greedy_epilogue"]
+# replint: traced -- jitted from the serving engine mixed step
+def fused_lmhead_greedy(h, w, *, use_kernel: bool = False,
+                        block_v: int = 0):
+    """h: (..., d) hidden states; w: (d, V) lm-head weight.
+
+    Returns (token (...,) int32, logprob (...,) f32) for the greedy argmax
+    of ``h @ w`` without materializing the (..., V) logits tensor: the
+    Pallas kernel streams vocab blocks of ``w`` through VMEM; the jnp path
+    scans the same blocks carrying running (max, logsumexp, argmax) stats.
+    ``block_v=0`` (or >= V) collapses the scan to a single fused
+    matmul+epilogue -- the right default off-TPU, where XLA's fusion
+    already avoids the second (B, V) intermediate.
+
+    Leading dims are flattened, so the 1-token decode case (B, d) and the
+    d-token verify case (B, T, d) share one implementation.
+    """
+    lead = h.shape[:-1]
+    d = h.shape[-1]
+    V = w.shape[1]
+    hf = h.reshape(-1, d)
+    if use_kernel:
+        bv = block_v if block_v > 0 else 2048
+        tok, lp = lmhead_epilogue_fwd(hf, w, block_v=bv,
+                                      interpret=_interpret())
+        return tok.reshape(lead), lp.reshape(lead)
+    if block_v <= 0 or block_v >= V:
+        logits = hf.astype(jnp.float32) @ w.astype(jnp.float32)
+        tok, lp = greedy_epilogue(logits)
+        return tok.reshape(lead), lp.reshape(lead)
+    # streaming jnp fallback: pad W to whole blocks once, scan with running
+    # stats -- peak activation is (N, block_v), never (N, V)
+    nv = -(-V // block_v)
+    wp = jnp.pad(w.astype(jnp.float32), ((0, 0), (0, nv * block_v - V)))
+    wb = wp.reshape(d, nv, block_v).transpose(1, 0, 2)        # (nv, d, bv)
+    N = hf.shape[0]
+    hf32 = hf.astype(jnp.float32)
+
+    def body(carry, inp):
+        i, wblk = inp
+        m, lse_l, bv_run, bi_run = carry
+        x = hf32 @ wblk                                       # (N, block_v)
+        idx = i * block_v + jnp.arange(block_v)[None, :]
+        x = jnp.where(idx < V, x, NEG_INF)
+        bmax = x.max(axis=-1)
+        barg = jnp.argmax(x, axis=-1).astype(jnp.int32)
+        better = bmax > bv_run
+        bv_run = jnp.where(better, bmax, bv_run)
+        bi_run = jnp.where(better, i * block_v + barg, bi_run)
+        m_cur = jnp.maximum(m, bmax)
+        lse_l = lse_l * jnp.exp(m - m_cur) + jnp.exp(x - m_cur[:, None]).sum(-1)
+        return (m_cur, lse_l, bv_run, bi_run), None
+
+    init = (jnp.full((N,), NEG_INF, jnp.float32),
+            jnp.zeros((N,), jnp.float32),
+            jnp.full((N,), NEG_INF, jnp.float32),
+            jnp.zeros((N,), jnp.int32))
+    (m, lse_l, bv_run, bi_run), _ = jax.lax.scan(
+        body, init, (jnp.arange(nv), wb))
+    lse = m + jnp.log(jnp.maximum(lse_l, 1e-30))
+    return bi_run.reshape(lead), (bv_run - lse).reshape(lead)
+
+
+__all__ = ["greedy_epilogue", "fused_lmhead_greedy"]

@@ -14,4 +14,13 @@ def greedy_epilogue_ref(logits):
     return tok, chosen
 
 
-__all__ = ["greedy_epilogue_ref"]
+def lmhead_greedy_ref(h, w):
+    """h: (..., d); w: (d, V) -> (token, logprob) via the materialized
+    logits tensor + full log_softmax (what the fused path must match)."""
+    lead = h.shape[:-1]
+    logits = h.reshape(-1, h.shape[-1]).astype(jnp.float32) @ w.astype(jnp.float32)
+    tok, lp = greedy_epilogue_ref(logits)
+    return tok.reshape(lead), lp.reshape(lead)
+
+
+__all__ = ["greedy_epilogue_ref", "lmhead_greedy_ref"]

@@ -245,6 +245,53 @@ def block_decode(x, bp, window, cache_k, cache_v, pos, cos, sin, cfg: ModelConfi
     return x + f, (cache_k, cache_v, cache_ks, cache_vs)
 
 
+def block_verify(x, bp, window, cache_k, cache_v, pos, cos, sin, cfg: ModelConfig,
+                 cache_ks=None, cache_vs=None, block_table=None,
+                 use_kernel: bool = False):
+    """Span decode: x (B, T, d), each row's T tokens at consecutive logical
+    positions starting at ``pos[b]``.
+
+    This is the mixed chunked-prefill / speculative-verify block: the span's
+    KV is scattered into the paged pool first (so query t attends its own
+    key), then per-query causal attention runs over the row's pages -- via
+    the mixed Pallas kernel or the gather + span-mask route.  T = 1 is
+    exactly :func:`block_decode`."""
+    int8_kv = cache_ks is not None
+    h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+    q, k, v = _project_qkv(h, bp, cfg)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    if int8_kv:
+        k_store, k_sc = _kv_quantize(k)
+        v_store, v_sc = _kv_quantize(v)
+    else:
+        k_store, v_store = k, v
+    ops = kvcache.PagedOps(block_table)
+    cache_k = ops.write_span(cache_k, k_store, pos)
+    cache_v = ops.write_span(cache_v, v_store, pos)
+    if int8_kv:
+        cache_ks = ops.write_span(cache_ks, k_sc, pos)
+        cache_vs = ops.write_span(cache_vs, v_sc, pos)
+    if use_kernel:
+        from repro.kernels.decode_attention.ops import decode_attention_mixed
+        o = decode_attention_mixed(q, cache_k, cache_v, block_table, pos,
+                                   window=window,
+                                   k_scale=cache_ks if int8_kv else None,
+                                   v_scale=cache_vs if int8_kv else None)
+    else:
+        k_eff = ops.view(cache_k)
+        v_eff = ops.view(cache_v)
+        if int8_kv:
+            k_eff = _kv_dequantize(k_eff, ops.view(cache_ks), cfg.dtype)
+            v_eff = _kv_dequantize(v_eff, ops.view(cache_vs), cfg.dtype)
+        mask = ops.span_mask(k_eff.shape[1], pos, q.shape[1], window)
+        o = sdpa(q, k_eff, v_eff, mask)
+    x = x + o.reshape(*x.shape[:2], -1) @ bp["wo"]
+    h = rms_norm(x, bp["ln2"], cfg.norm_eps)
+    f, _ = _ffn(h, bp, cfg)
+    return x + f, (cache_k, cache_v, cache_ks, cache_vs)
+
+
 # ---------------------------------------------------------------------------------
 # model-level functions
 # ---------------------------------------------------------------------------------
@@ -415,7 +462,63 @@ def decode_step(params, cache, token, pos, cfg: ModelConfig, *,
     return _lm_head(params, x, cfg), new_cache
 
 
+# replint: traced -- jitted from the serving engine mixed step
+def verify_step(params, cache, tokens, pos, cfg: ModelConfig, *,
+                block_table, use_kernel: bool = False,
+                lmhead_kernel: bool = False, lmhead_block_v: int = 0):
+    """Score a T-token span per row in one forward: tokens (B, T) int32 at
+    logical positions ``pos[b] + t`` over a paged cache.
+
+    Returns ``(tok (B, T) int32, lp (B, T) f32, new_cache)``: the greedy
+    next token and its logprob *after each span position*, computed through
+    the fused lm-head epilogue so the (B, T, V) logits tensor is never
+    materialized.  One function serves every mixed-step role:
+
+    * decode row (T == 1): ``tok[:, 0]`` is the next token -- identical to
+      ``decode_step`` + ``greedy_epilogue``;
+    * speculative verify (T == 1 + d): ``tok[:, j]`` is the model's true
+      output after draft j, giving the acceptance rule its oracle;
+    * prefill chunk: the span's KV is committed, ``tok[:, -1]`` seeds
+      decode when the chunk is the prompt's last.
+    """
+    from repro.kernels.sampling.ops import fused_lmhead_greedy
+    x = params["embed"][tokens]
+    T = tokens.shape[1]
+    cos, sin = rope_tables(pos[:, None] + jnp.arange(T)[None, :],
+                           cfg.resolved_head_dim, cfg.rope_theta)
+    windows = layer_windows(cfg)
+    int8_kv = cfg.kv_cache_dtype == "int8"
+
+    def body(x, layer):
+        if int8_kv:
+            bp, w, ck, cv, cks, cvs = layer
+        else:
+            bp, w, ck, cv = layer
+            cks = cvs = None
+        x, (ck, cv, cks, cvs) = block_verify(x, bp, w, ck, cv, pos, cos, sin,
+                                             cfg, cache_ks=cks, cache_vs=cvs,
+                                             block_table=block_table,
+                                             use_kernel=use_kernel)
+        return x, ((ck, cv, cks, cvs) if int8_kv else (ck, cv))
+
+    if int8_kv:
+        x, (ks, vs, kss, vss) = jax.lax.scan(
+            body, x, (params["blocks"], windows, cache["k"], cache["v"],
+                      cache["k_scale"], cache["v_scale"]))
+        new_cache = {"k": ks, "v": vs, "k_scale": kss, "v_scale": vss}
+    else:
+        x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"], windows,
+                                             cache["k"], cache["v"]))
+        new_cache = {"k": ks, "v": vs}
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    w_head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    tok, lp = fused_lmhead_greedy(x, w_head, use_kernel=lmhead_kernel,
+                                  block_v=lmhead_block_v)
+    return tok, lp, new_cache
+
+
 __all__ = [
     "init_params", "forward", "loss_fn", "prefill", "decode_step", "init_cache",
-    "layer_windows", "block_forward", "block_decode",
+    "verify_step", "layer_windows", "block_forward", "block_decode",
+    "block_verify",
 ]

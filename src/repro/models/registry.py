@@ -23,6 +23,10 @@ class Model:
     init_cache: Callable           # (batch, max_len) -> cache
     supports_paged: bool = False   # decode_step accepts block_table= (paged KV)
     use_kernel: bool = False       # Pallas tier on (decode attn + epilogue)
+    # (params, cache, tokens (B,T), pos (B,), block_table=) ->
+    # (tok (B,T), lp (B,T), cache): span scoring through the fused lm-head;
+    # None for families without the paged mixed path
+    verify_step: Callable | None = None
 
     def abstract_params(self):
         return jax.eval_shape(self.init_params, jax.random.key(0))
@@ -50,6 +54,9 @@ def build_model(cfg: ModelConfig, *, use_kernel: bool = False) -> Model:
         init_cache=partial(mod.init_cache, cfg),
         supports_paged=paged,
         use_kernel=use_kernel,
+        verify_step=(partial(mod.verify_step, cfg=cfg, use_kernel=use_kernel,
+                             lmhead_kernel=use_kernel)
+                     if paged else None),
     )
 
 

@@ -11,23 +11,33 @@ that drive the paper's auto-scaling policies.  ``Request.score`` is the
 tokens the model actually generated, fed to the control plane's
 ``output_score`` channel by the serve driver.
 
-Serving path (attention families; see DESIGN.md "The device-resident decode
-loop"):
+Serving path (attention families; see DESIGN.md "Overlapped prefill and
+speculative decode"):
 
-* **paged KV cache** (`repro.serving.kvcache`) -- pages allocated at
-  prefill, appended as decode crosses page boundaries, freed on completion;
-* **batched bucketed prefill** -- queued prompts sharing a power-of-two
-  ``request_class`` bucket are coalesced into ONE fixed-width prefill call
-  (padding rows scatter into the trash page), so jit retraces stay bounded
-  by the number of distinct buckets and per-request dispatch is amortized;
+* **paged KV cache** (`repro.serving.kvcache`) -- worst-case pages reserved
+  at admission, allocated as spans are written, freed on completion;
+* **mixed chunked-prefill / speculative decode** (the default) -- queued
+  prompts are admitted with NO prefill dispatch: every engine step runs ONE
+  jitted ``lax.while_loop`` over the fixed ``max_batch``-wide slot array in
+  which each row either streams its next span-sized prompt chunk or
+  verifies a drafted token block (n-gram proposer + longest-agreeing-prefix
+  acceptance), so a flash crowd of prompts never stalls in-flight decodes
+  and accepted drafts emit multiple tokens per model forward.  The fused
+  lm-head epilogue (`repro.kernels.sampling`) streams vocab blocks of the
+  head weights so no (B, T, V) logits tensor is materialized; rejected
+  draft KV positions are rolled back via the page pool (``shrink_to``).
+  One compiled variant total: the width is fixed and the step count is a
+  traced operand;
+* **batched bucketed prefill** (``chunked_prefill=False``) -- queued
+  prompts sharing a power-of-two ``request_class`` bucket are coalesced
+  into ONE fixed-width prefill call (padding rows scatter into the trash
+  page); a partial group waits at most ``bucket_max_wait`` engine steps for
+  bucket-mates before flushing, so cold buckets cannot starve;
 * **device-resident decode** -- one jitted ``lax.while_loop`` advances the
   compacted active-slot batch up to K steps entirely on device, carrying
   tokens, positions, remaining budgets, eos/finish masks, and running
-  logprob-score sums; the fused sampling epilogue
-  (`repro.kernels.sampling`) picks each next token and its logprob without
-  materializing a normalized (B, V) tensor, and the host syncs (one
-  ``np.asarray`` round trip, one block-table upload) only every K steps or
-  when a slot finishes.
+  logprob-score sums; the host syncs (one ``np.asarray`` round trip, one
+  block-table upload) only every K steps or when a slot finishes.
 
 Families without a paged decode path (ssm/hybrid, audio/encdec) fall back
 to the legacy dense tree cache, which batch-decodes every slot -- through
@@ -46,6 +56,7 @@ from repro.kernels.decode_attention import autotune
 from repro.kernels.sampling.ops import greedy_epilogue
 from repro.models.registry import Model
 from repro.serving.kvcache import TRASH_PAGE, PagedKVCache
+from repro.serving.speculate import make_proposer, prefix_len
 
 
 def _bucket(n: int) -> int:
@@ -82,6 +93,17 @@ class ServeConfig:
     num_pages: int | None = None       # default: max_batch*(max_len/ps) + trash
     decode_steps: int = 8              # device-resident steps per host sync
     prefill_batch: int | None = None   # coalesced prefill width (None: max_batch)
+    # -- mixed chunked-prefill / speculative decode (paged families) --
+    chunked_prefill: bool = True       # fold prefill chunks into the decode loop
+    chunk_size: int | None = None      # prefill tokens per mixed step (None: autotune)
+    draft_len: int | None = None       # speculative tokens per step (None: autotune;
+                                       # 0 disables speculation)
+    proposer: str = "ngram"            # draft proposer kind (speculate.make_proposer)
+    ngram: int = 2                     # n-gram order for the lookup proposer
+    lmhead_block_v: int | None = None  # fused lm-head vocab tile (None: autotune)
+    # -- bucketed-prefill path (chunked_prefill=False) --
+    bucket_max_wait: int = 4           # engine steps a partial bucket group may
+                                       # wait for bucket-mates before flushing
 
 
 class ServingEngine:
@@ -113,7 +135,33 @@ class ServingEngine:
         self.prefill_batch = int(cfg.prefill_batch or cfg.max_batch)
         self._prefill_rows = 0                     # real rows batched-prefilled
         self._prefill_width = 0                    # padded rows dispatched
+        self._bucket_stats: dict[int, list] = {}   # bucket -> [rows, width]
+        self._bucket_first_wait: dict[int, int] = {}   # bucket -> first defer step
+        self._clock = 0                            # ticks every step() call
         self.paged = cfg.paged and model.supports_paged
+        self.chunked = (self.paged and cfg.chunked_prefill
+                        and model.verify_step is not None)
+        if self.chunked:
+            chunk = cfg.chunk_size or autotune.default_chunk_size()
+            draft = (cfg.draft_len if cfg.draft_len is not None
+                     else autotune.default_draft_len())
+            self.spec_len = max(int(draft), 0)
+            self.span = max(int(chunk), self.spec_len + 1, 1)
+            self.lmhead_block_v = (cfg.lmhead_block_v
+                                   if cfg.lmhead_block_v is not None
+                                   else autotune.default_lmhead_block_v())
+            self.proposer = (make_proposer(cfg.proposer, self.span - 1,
+                                           ngram=cfg.ngram)
+                             if self.span > 1 else None)
+            self._mixed_jit = jax.jit(self._mixed_step_fn)
+        else:
+            self.spec_len = 0
+            self.span = 1
+            self.proposer = None
+            self._mixed_jit = None
+        # speculation / interleave stats (bench artifact)
+        self._mixed_emitted = 0                    # tokens emitted by mixed loop
+        self._mixed_live_iters = 0                 # live-row loop iterations
         if self.paged:
             page_size = cfg.page_size or autotune.default_page_size()
             self.kv = PagedKVCache(model.init_cache, max_batch=cfg.max_batch,
@@ -201,6 +249,122 @@ class ServingEngine:
             lambda p, kv, tk, ps: self.model.decode_step(p, kv, tk, ps,
                                                          block_table=tbl))
 
+    def _mixed_step_fn(self, params, pages, hist, ell, pos, rem, live, tbl,
+                       n_steps):
+        """Up to ``n_steps`` mixed chunked-prefill / speculative-decode steps
+        entirely on device: ONE kernel invocation per step serves every row,
+        whatever phase it is in.
+
+        Per-row state is the committed token history ``hist`` (prompt +
+        emitted; garbage past ``ell``) and the committed-KV count ``pos``.
+        Each iteration builds a T-token block per row: block position j
+        carries ``hist[pos + j]`` where known (a *prefill chunk*) and a
+        proposer draft where not (*speculation*); the invariant
+        ``pos <= ell - 1`` makes position 0 always known.  One
+        ``verify_step`` scores the whole batch; position j's context is
+        correct iff every earlier block token was known or agreed with the
+        verifier, so the longest such prefix (``raw_valid``) is committed KV
+        and the verifier outputs at committed positions past ``ell - 1``
+        are emitted -- capped by the draft budget, the remaining token
+        budget, and eos.  A decode row (pos == ell-1) reduces to verify
+        last-token + drafts (always >= 1 token out); a mid-prompt row
+        commits a chunk and emits nothing; the final chunk emits its first
+        tokens in the same invocation that commits it -- no mode flag, no
+        separate prefill dispatch, so a flash crowd of prompts never stalls
+        in-flight decodes.
+        """
+        K = self.decode_steps
+        T = self.span
+        na, H = hist.shape
+        eos = int(self.cfg.eos_token)
+        cap = min(T, 1 + self.spec_len)    # emitted tokens per row per step
+        OUT = K * cap
+        jr = jnp.arange(T)
+        rows = jnp.arange(na)
+        verify = self.model.verify_step
+
+        carry = dict(
+            i=jnp.int32(0), kv=pages, hist=hist, ell=ell, pos=pos, rem=rem,
+            live=live,
+            out_toks=jnp.full((na, OUT), -1, jnp.int32),
+            lp_sum=jnp.zeros((na,), jnp.float32),
+            n_emit=jnp.zeros((na,), jnp.int32),
+            live_iters=jnp.int32(0),
+        )
+
+        def cond(c):
+            return (c["i"] < n_steps) & jnp.any(c["live"])
+
+        def body(c):
+            hist, ell, pos, live = c["hist"], c["ell"], c["pos"], c["live"]
+            idx = pos[:, None] + jr[None, :]                  # (na, T)
+            known = idx < ell[:, None]
+            u = jnp.take_along_axis(hist, jnp.clip(idx, 0, H - 1), axis=1)
+            if T > 1:
+                drafts = self.proposer(hist, ell)             # (na, T-1)
+                didx = jnp.clip(idx - ell[:, None], 0, T - 2)
+                u = jnp.where(known, u,
+                              jnp.take_along_axis(drafts, didx, axis=1))
+            tok, lp, kv = verify(params, c["kv"], u, pos, block_table=tbl,
+                                 lmhead_block_v=self.lmhead_block_v)
+            # acceptance: block position j is in-sequence iff known, or its
+            # token equals the verifier's output after position j-1 (chained
+            # through the prefix rule); position 0 is known by invariant
+            if T > 1:
+                prev_ok = jnp.concatenate(
+                    [jnp.ones((na, 1), bool), u[:, 1:] == tok[:, :-1]], axis=1)
+                raw_valid = prefix_len(known | prev_ok)       # (na,) >= 1
+            else:
+                raw_valid = jnp.ones((na,), jnp.int32)
+            # emission: verifier outputs at committed positions >= ell-1,
+            # capped by draft budget, token budget, and (emitted) eos
+            krank = jr[None, :] - (ell - 1 - pos)[:, None]    # emission rank
+            cand = ((krank >= 0) & (jr[None, :] < raw_valid[:, None])
+                    & (krank < jnp.minimum(c["rem"], cap)[:, None])
+                    & live[:, None])
+            if eos >= 0:
+                eos_hit = cand & (tok == eos)
+                emit = cand & (jnp.cumsum(eos_hit, axis=1) - eos_hit == 0)
+                ate_eos = (eos_hit & emit).any(axis=1)
+            else:
+                emit = cand
+                ate_eos = jnp.zeros((na,), bool)
+            n_new = emit.sum(axis=1).astype(jnp.int32)
+            # extend hist with the emitted tokens (flat scatter, OOB drops)
+            col = ell[:, None] + krank
+            hidx = jnp.where(emit, rows[:, None] * H + jnp.clip(col, 0, H - 1),
+                             na * H)
+            hist = (hist.reshape(-1)
+                    .at[hidx.reshape(-1)].set(tok.reshape(-1), mode="drop")
+                    .reshape(na, H))
+            ocol = c["n_emit"][:, None] + krank
+            oidx = jnp.where(emit,
+                             rows[:, None] * OUT + jnp.clip(ocol, 0, OUT - 1),
+                             na * OUT)
+            out_toks = (c["out_toks"].reshape(-1)
+                        .at[oidx.reshape(-1)].set(tok.reshape(-1), mode="drop")
+                        .reshape(na, OUT))
+            ell_n = ell + n_new
+            # committed KV advances by the accepted prefix but never past the
+            # last committed token: accepted-but-unemitted drafts roll back
+            # (their page-pool writes are re-verified -- rewritten at the
+            # same logical positions -- before any mask lets them be read)
+            pos_n = jnp.where(live,
+                              jnp.minimum(pos + raw_valid, ell_n - 1), pos)
+            rem_n = c["rem"] - n_new
+            live_n = live & (rem_n > 0) & ~ate_eos
+            return dict(
+                i=c["i"] + 1, kv=kv, hist=hist, ell=ell_n, pos=pos_n,
+                rem=rem_n, live=live_n, out_toks=out_toks,
+                lp_sum=c["lp_sum"] + (lp * emit).sum(axis=1),
+                n_emit=c["n_emit"] + n_new,
+                live_iters=c["live_iters"] + live.sum().astype(jnp.int32),
+            )
+
+        c = jax.lax.while_loop(cond, body, carry)
+        return (c["kv"], c["out_toks"], c["lp_sum"], c["n_emit"], c["pos"],
+                c["rem"], c["i"], c["live_iters"])
+
     def _dense_prefill_fn(self, params, batch):
         logits, cache1 = self.model.prefill(params, batch,
                                             max_len=self.cfg.max_len)
@@ -246,16 +410,42 @@ class ServingEngine:
         return int(self._decode_jit._cache_size())
 
     @property
+    def mixed_trace_count(self) -> int:
+        """Compiled mixed-step variants -- exactly 1 after warmup (the loop
+        runs at the fixed ``max_batch`` width with the step count traced)."""
+        return int(self._mixed_jit._cache_size()) if self.chunked else 0
+
+    @property
     def prefill_occupancy(self) -> float:
         """Real rows per dispatched prefill row (1.0 = no padding waste)."""
         return self._prefill_rows / max(self._prefill_width, 1)
 
+    @property
+    def bucket_occupancy(self) -> dict[int, float]:
+        """Per-bucket prefill occupancy (bucketed path only; the chunked
+        path has no padded prefill rows to waste)."""
+        return {pb: rows / max(width, 1)
+                for pb, (rows, width) in sorted(self._bucket_stats.items())}
+
+    @property
+    def speculation_stats(self) -> dict[str, float]:
+        """Mixed-loop throughput counters: tokens emitted, live-row loop
+        iterations, and their ratio (tokens per row-step; > 1 means
+        speculation is beating one-token-per-step decode)."""
+        return {
+            "emitted": float(self._mixed_emitted),
+            "live_iters": float(self._mixed_live_iters),
+            "tokens_per_row_step": (self._mixed_emitted
+                                    / max(self._mixed_live_iters, 1)),
+        }
+
     # -- slot lifecycle -----------------------------------------------------------
     def _reset_slot(self, slot: int) -> None:
         """Free a slot's cache state when it empties (completion, eviction,
-        or reclaim of a force-popped slot): release its pages and zero the
-        per-slot position/budget registers."""
-        if self.paged and self.kv.held[slot]:
+        or reclaim of a force-popped slot): release its pages and drop its
+        reservation (a chunked slot may hold a reservation before its first
+        page), then zero the per-slot position/budget registers."""
+        if self.paged and (self.kv.held[slot] or self.kv.worst[slot]):
             self.kv.release(slot)
         self.pos[slot] = 0
         self.remaining[slot] = 0
@@ -317,6 +507,9 @@ class ServingEngine:
         lpv = np.asarray(lpv)
         self._prefill_rows += len(group)
         self._prefill_width += width
+        stats = self._bucket_stats.setdefault(pb, [0, 0])
+        stats[0] += len(group)
+        stats[1] += width
         fill_done = 0
         for j, (slot, req, install) in enumerate(group):
             fill_done += self._note_prefilled(slot, req, install,
@@ -360,7 +553,7 @@ class ServingEngine:
         if self.paged:
             # reclaim pages of slots that were force-popped without release()
             for s in free:
-                if self.kv.held[s]:
+                if self.kv.held[s] or self.kv.worst[s]:
                     self._reset_slot(s)
         fill_done = 0
         while free and self.queue and len(self.active) + fill_done < limit:
@@ -380,6 +573,21 @@ class ServingEngine:
                 self._prefill_width += 1
                 fill_done += self._note_prefilled(slot, req, install,
                                                   tok, logp, now)
+                continue
+            if self.chunked:
+                # chunked admission: no prefill dispatch at all -- reserve
+                # the worst-case pages and hand the prompt to the mixed
+                # loop, which streams it in span-sized chunks interleaved
+                # with every other row's decode
+                total = len(req.prompt) + req.max_new_tokens - 1
+                if not self.kv.can_admit(total):
+                    break                # defer until completions free pages
+                self.queue.pop(0)
+                slot = free.pop(0)
+                self.kv.reserve(slot, total)
+                self.pos[slot] = 0
+                self.remaining[slot] = req.max_new_tokens
+                self.active[slot] = req
                 continue
             # paged: collect a same-bucket FIFO group for one batched prefill
             pb = self._prefill_bucket(req)
@@ -407,6 +615,21 @@ class ServingEngine:
                 group.append((free.pop(0), r, install))
             if not group:
                 break                    # head of queue blocked on pages
+            full = (len(group) >= self.prefill_batch or not free
+                    or len(self.active) + fill_done + len(group) >= limit)
+            if (not full and not blocked and self.cfg.bucket_max_wait > 0
+                    and (self.active or fill_done)):
+                # partial group while the engine has other work: wait for
+                # bucket-mates to raise occupancy -- but never beyond
+                # ``bucket_max_wait`` engine steps, so a lone request in a
+                # cold bucket cannot starve behind a busy decode batch
+                first = self._bucket_first_wait.setdefault(pb, self._clock)
+                if self._clock - first < self.cfg.bucket_max_wait:
+                    for slot, r, _ in reversed(group):
+                        free.insert(0, slot)
+                        self.queue.insert(0, r)
+                    break
+            self._bucket_first_wait.pop(pb, None)
             fill_done += self._prefill_group(group, pb, now)
             if blocked:
                 break
@@ -431,15 +654,19 @@ class ServingEngine:
         rem_out = np.asarray(rem_out)
         finished = []
         for i, s in rows:
+            # position/budget always advance (a mixed-loop row can commit
+            # prefill chunks without emitting a single token)
+            self.pos[s] = int(pos_out[i])
+            self.remaining[s] = int(rem_out[i])
             ne = int(n_emit[i])
             if ne == 0:
                 continue
             req = self.active[s]
             prev = len(req.output)
+            if prev == 0:
+                req.first_token_s = now
             req.output.extend(int(t) for t in out_toks[i, :ne])
             req.score = (req.score * prev + float(lp_sum[i])) / (prev + ne)
-            self.pos[s] = int(pos_out[i])
-            self.remaining[s] = int(rem_out[i])
             if rem_out[i] <= 0 or req.output[-1] == self.cfg.eos_token:
                 finished.append(s)
         for s in finished:
@@ -477,6 +704,59 @@ class ServingEngine:
                                    n_emit, pos_out, rem_out, now)
         return n, int(iters)
 
+    def _decode_active_mixed(self, now: float, k: int = 1) -> tuple[int, int]:
+        """Up to ``k`` mixed chunked-prefill / speculative steps over the
+        active slots in one device loop.  The batch is the full fixed
+        ``max_batch`` width (dead rows carry the trash table), so exactly
+        ONE compiled variant serves every slot mix -- no per-population
+        retraces on the hot path.  Returns (slots served, loop iterations).
+        """
+        slots = sorted(self.active)
+        n = len(slots)
+        if n == 0:
+            return 0, 0
+        na = self.cfg.max_batch
+        T = self.span
+        H = self.cfg.max_len + 1           # prompt + every emitted token
+        hist = np.zeros((na, H), np.int32)
+        ellv = np.zeros((na,), np.int32)
+        posv = np.zeros((na,), np.int32)
+        remv = np.zeros((na,), np.int32)
+        livev = np.zeros((na,), bool)
+        tblv = np.zeros((na, self.kv.pages_per_slot), np.int32)
+        for i, s in enumerate(slots):
+            req = self.active[s]
+            plen = len(req.prompt)
+            hist[i, :plen] = req.prompt
+            if req.output:
+                hist[i, plen:plen + len(req.output)] = req.output
+            ellv[i] = plen + len(req.output)
+            total = plen + req.max_new_tokens - 1
+            # pre-allocate every page the next k on-device spans may write;
+            # writes past ``total`` hit TRASH table entries harmlessly, so
+            # the span never outgrows the admission reservation
+            span = min(k * T, total - int(self.pos[s]))
+            self.kv.ensure_writable_span(s, int(self.pos[s]), max(span, 1))
+            posv[i] = self.pos[s]
+            remv[i] = self.remaining[s]
+            livev[i] = True
+            tblv[i] = self.kv.block_table[s]
+        (self.kv.pages, out_toks, lp_sum, n_emit, pos_out, rem_out, iters,
+         live_iters) = self._mixed_jit(
+            self.params, self.kv.pages, jnp.asarray(hist), jnp.asarray(ellv),
+            jnp.asarray(posv), jnp.asarray(remv), jnp.asarray(livev),
+            jnp.asarray(tblv), jnp.int32(k))
+        self._apply_decode_outputs(list(enumerate(slots)), out_toks, lp_sum,
+                                   n_emit, pos_out, rem_out, now)
+        self._mixed_emitted += int(np.asarray(n_emit).sum())
+        self._mixed_live_iters += int(live_iters)
+        # KV rollback: hand back pages that only ever held rejected
+        # speculative writes (the next span re-appends them if accepted)
+        for s in slots:
+            if s in self.active:
+                self.kv.shrink_to(s, max(int(self.pos[s]), 1))
+        return n, int(iters)
+
     def _decode_all_dense(self, now: float, k: int = 1) -> tuple[int, int]:
         """Legacy fallback (no paged cache): batch-decode every slot of the
         dense tree cache -- idle slots compute garbage that is discarded.
@@ -512,13 +792,18 @@ class ServingEngine:
             raise ValueError(
                 f"decode_steps={k} > ServeConfig.decode_steps="
                 f"{self.decode_steps}; raise the config to burst this far")
+        self._clock += 1
         fill_done = self._fill_slots(now)
         if not self.active:
             if fill_done:
                 self.step_count += 1
             return fill_done
-        served, iters = (self._decode_active_paged(now, k) if self.paged
-                         else self._decode_all_dense(now, k))
+        if self.chunked:
+            served, iters = self._decode_active_mixed(now, k)
+        elif self.paged:
+            served, iters = self._decode_active_paged(now, k)
+        else:
+            served, iters = self._decode_all_dense(now, k)
         self.step_count += max(iters, 1)
         return served + fill_done
 

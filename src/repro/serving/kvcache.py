@@ -57,6 +57,32 @@ def paged_update(cache, new, block_table, pos):
 
 
 # replint: traced -- jitted from the serving engine
+def paged_update_span(cache, new, block_table, pos):
+    """Scatter a span of ``T`` new tokens per batch row into the page pool.
+
+    cache: (P, ps, *rest); new: (B, T, *rest); block_table: (B, n) int32;
+    pos: (B,) logical positions of each row's span start -- row b writes
+    logical positions [pos[b], pos[b] + T).  This is the mixed chunked-
+    prefill / speculative-verify write: positions past a row's allocated
+    pages hit TRASH block-table entries and land in page 0; positions past
+    the table itself are clamped to the row's last logical slot, whose
+    entry is TRASH unless the row is full -- and a full row only overflows
+    after it has parked, when its KV is never read again.
+    """
+    P, ps = cache.shape[0], cache.shape[1]
+    rest = cache.shape[2:]
+    B, T = new.shape[0], new.shape[1]
+    n = block_table.shape[1]
+    p = jnp.clip(pos[:, None] + jnp.arange(T)[None, :], 0, n * ps - 1)  # (B, T)
+    pages = jnp.take_along_axis(block_table, p // ps, axis=1)           # (B, T)
+    idx = pages * ps + p % ps
+    flat = cache.reshape((P * ps,) + rest)
+    flat = flat.at[idx.reshape(-1)].set(
+        new.reshape((B * T,) + rest).astype(cache.dtype))
+    return flat.reshape(cache.shape)
+
+
+# replint: traced -- jitted from the serving engine
 def paged_gather(cache, block_table):
     """Reconstruct the dense per-slot view from the page pool.
 
@@ -109,6 +135,21 @@ def _vector_mask(seq_len, pos, window):
     return valid[:, None, :]
 
 
+# replint: traced -- jitted from the serving engine
+def _span_mask(seq_len, pos, q_len, window):
+    """(B, T, S) causal mask for a T-token span starting at per-row ``pos``:
+    query j of row b sits at logical position pos[b] + j and attends keys
+    k <= pos[b] + j (minus the sliding window, when set).  The T=1 slice is
+    exactly :func:`_vector_mask` -- the mixed chunked-prefill / speculative
+    path and the single-token decode path can never diverge."""
+    k_pos = jnp.arange(seq_len)                               # (S,)
+    q_pos = pos[:, None] + jnp.arange(q_len)[None, :]         # (B, T)
+    valid = k_pos[None, None, :] <= q_pos[:, :, None]         # (B, T, S)
+    valid &= jnp.where(window > 0,
+                       k_pos[None, None, :] > q_pos[:, :, None] - window, True)
+    return valid
+
+
 class DenseScalarOps:
     """Uniform-position dense cache: all rows write at the same scalar pos."""
 
@@ -152,11 +193,17 @@ class PagedOps:
     def write(self, cache, new, pos):
         return paged_update(cache, new, self.block_table, pos)
 
+    def write_span(self, cache, new, pos):
+        return paged_update_span(cache, new, self.block_table, pos)
+
     def view(self, cache):
         return paged_gather(cache, self.block_table)
 
     def mask(self, seq_len, pos, window):
         return _vector_mask(seq_len, pos, window)
+
+    def span_mask(self, seq_len, pos, q_len, window):
+        return _span_mask(seq_len, pos, q_len, window)
 
 
 # ---------------------------------------------------------------------------------
@@ -235,6 +282,19 @@ class PagedKVCache:
         out[:n] = ids
         return out
 
+    def reserve(self, slot: int, total_tokens: int) -> None:
+        """Register ``slot``'s worst-case page count without allocating yet.
+
+        Chunked-prefill admission: the slot's pages are appended lazily by
+        :meth:`ensure_writable_span` as chunks stream in, but the reservation
+        must be on the books from admission so co-admitted requests cannot
+        promise away the pages this one will need."""
+        worst = self.pages_needed(total_tokens)
+        if worst > self.pages_per_slot:
+            raise RuntimeError(f"reservation past slot capacity at slot {slot}")
+        self._outstanding += worst - int(self.worst[slot])
+        self.worst[slot] = worst
+
     def ensure_writable(self, slot: int, pos: int) -> None:
         """Append a page if the next write at logical ``pos`` crosses into an
         unallocated page (decode-time growth)."""
@@ -265,6 +325,31 @@ class PagedKVCache:
             self.held[slot] += 1
             self._outstanding -= 1
 
+    def shrink_to(self, slot: int, n_tokens: int) -> int:
+        """Return pages past ``ceil(n_tokens / ps)`` to the free list.
+
+        Speculative-decode rollback: the host pre-allocates pages for the
+        worst case (every draft token accepted); after the sync reveals how
+        many were actually committed, pages holding only rejected positions
+        are handed back and their table entries reset to TRASH.  The freed
+        pages re-enter ``_outstanding`` -- the slot's reservation still
+        covers them, so a later accept-heavy burst can re-append without
+        starving anyone.  Rejected tokens *within* the kept pages are not
+        scrubbed: the next verify writes the same logical positions before
+        any mask lets them be read.
+
+        Returns the number of pages freed."""
+        keep = min(self.pages_needed(n_tokens), int(self.held[slot]))
+        freed = int(self.held[slot]) - keep
+        if freed <= 0:
+            return 0
+        for i in range(keep, int(self.held[slot])):
+            self._free.append(int(self.block_table[slot, i]))
+            self.block_table[slot, i] = TRASH_PAGE
+        self.held[slot] = keep
+        self._outstanding += freed
+        return freed
+
     def release(self, slot: int) -> None:
         """Return every page ``slot`` holds and drop its reservation."""
         n = int(self.held[slot])
@@ -287,6 +372,7 @@ class PagedKVCache:
 
 
 __all__ = [
-    "TRASH_PAGE", "paged_update", "paged_gather", "write_prefill_pages",
+    "TRASH_PAGE", "paged_update", "paged_update_span", "paged_gather",
+    "write_prefill_pages",
     "DenseScalarOps", "DenseVectorOps", "PagedOps", "PagedKVCache",
 ]

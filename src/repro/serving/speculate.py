@@ -1,0 +1,118 @@
+"""Speculative multi-token decode: draft proposers + the acceptance rule.
+
+The engine's mixed step verifies a block of ``T`` tokens per row in one
+batched forward.  For a decode row the block is ``[committed-last-token,
+draft_1, .., draft_{T-1}]``; the verifier's greedy output at position ``j``
+is the model's true next token after block position ``j``, so the longest
+prefix of drafts that agrees with the shifted verifier output can be
+committed at once -- plus one *bonus* token (the verifier's own output at
+the last agreeing position), which is why a step always emits at least one
+token and greedy speculative decode is token-exact against the
+single-token oracle.
+
+Proposers are pure jit-side functions ``(hist, ell) -> (B, d) int32``:
+
+* ``hist``: (B, H) committed token history (prompt + emitted), garbage past
+  ``ell``;
+* ``ell``: (B,) int32 valid history lengths;
+* returns ``d`` draft tokens per row, to be placed *after* ``hist[ell-1]``.
+
+A wrong draft is never incorrect output -- it only wastes verifier FLOPs --
+so proposers are free to be cheap and speculative.  :class:`NGramProposer`
+is prompt-lookup decoding (match the trailing n-gram against history, copy
+what followed); any callable with the same signature plugs in via
+``ServeConfig.proposer`` (e.g. a learned draft head closing over its
+params).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Protocol
+
+import jax.numpy as jnp
+
+ProposerFn = Callable[..., "jnp.ndarray"]
+
+
+class Proposer(Protocol):
+    """Draft proposer protocol: jit-side callable drafting ``draft_len``
+    tokens per row from the committed history."""
+
+    draft_len: int
+
+    def __call__(self, hist, ell): ...
+
+
+# replint: traced -- jitted from the serving engine mixed step
+def prefix_len(match):
+    """Length of the leading all-True run along the last axis.
+
+    ``match``: (..., T) bool.  This is the acceptance rule: the number of
+    block positions committed is the longest prefix where every draft token
+    agreed with the verifier (known-history positions count as agreeing by
+    construction).
+    """
+    return jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=-1), axis=-1)
+
+
+@dataclass(frozen=True)
+class NGramProposer:
+    """Prompt-lookup decoding: find the latest earlier occurrence of the
+    trailing ``ngram`` committed tokens and propose what followed it.
+
+    Falls back to repeating the last committed token when no match exists
+    or the matched continuation runs past known history -- for greedy
+    decode on loopy sequences the repeat guess is accepted surprisingly
+    often, and a rejected guess costs nothing but the verifier FLOPs the
+    step was already paying.
+    """
+
+    draft_len: int
+    ngram: int = 2
+
+    # replint: traced -- jitted from the serving engine mixed step
+    def __call__(self, hist, ell):
+        B, H = hist.shape
+        i = jnp.arange(H)[None, :]                            # candidate end
+        last_i = jnp.clip(ell - 1, 0, H - 1)[:, None]         # (B, 1)
+        last = jnp.take_along_axis(hist, last_i, axis=1)      # (B, 1)
+        match = jnp.ones((B, H), bool)
+        for j in range(self.ngram):
+            a = jnp.take_along_axis(hist, jnp.clip(i - j, 0, H - 1), axis=1)
+            b = jnp.take_along_axis(hist, jnp.clip(last_i - j, 0, H - 1), axis=1)
+            match &= (a == b) & (i - j >= 0)
+        # the end of the candidate n-gram must precede the trailing one, and
+        # a continuation token must exist: i + 1 <= ell - 1
+        valid = (i >= self.ngram - 1) & (i <= ell[:, None] - 2)
+        m = jnp.where(match & valid, i, -1).max(axis=1)       # (B,), -1 = none
+        cont = m[:, None] + 1 + jnp.arange(self.draft_len)[None, :]
+        known = (m[:, None] >= 0) & (cont < ell[:, None])
+        toks = jnp.take_along_axis(hist, jnp.clip(cont, 0, H - 1), axis=1)
+        return jnp.where(known, toks, last)
+
+
+@dataclass(frozen=True)
+class RepeatProposer:
+    """Degenerate proposer: repeat the last committed token.  Useful as the
+    cheapest baseline and as the fallback body of fancier proposers."""
+
+    draft_len: int
+
+    # replint: traced -- jitted from the serving engine mixed step
+    def __call__(self, hist, ell):
+        last_i = jnp.clip(ell - 1, 0, hist.shape[1] - 1)[:, None]
+        last = jnp.take_along_axis(hist, last_i, axis=1)      # (B, 1)
+        return jnp.broadcast_to(last, (hist.shape[0], self.draft_len))
+
+
+def make_proposer(kind: str, draft_len: int, *, ngram: int = 2) -> Proposer:
+    """Proposer registry for config-string construction."""
+    if kind == "ngram":
+        return NGramProposer(draft_len=draft_len, ngram=ngram)
+    if kind == "repeat":
+        return RepeatProposer(draft_len=draft_len)
+    raise ValueError(f"unknown proposer kind: {kind!r}")
+
+
+__all__ = ["Proposer", "ProposerFn", "prefix_len",
+           "NGramProposer", "RepeatProposer", "make_proposer"]

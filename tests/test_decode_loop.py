@@ -144,7 +144,8 @@ def test_batched_prefill_coalesces_same_bucket(smol):
     """Four same-bucket prompts arrive together: ONE batched prefill call
     fills all four slots (one jit trace, full occupancy)."""
     cfg, m, params = smol
-    eng = ServingEngine(m, params, ServeConfig(max_batch=4, max_len=64))
+    eng = ServingEngine(m, params, ServeConfig(max_batch=4, max_len=64,
+                                               chunked_prefill=False))
     rng = np.random.default_rng(7)
     for i in range(4):
         eng.submit(Request(rid=i,
@@ -171,7 +172,9 @@ def test_batched_prefill_mixed_buckets_split_groups(smol):
     """A bucket change at the queue head closes the group: two buckets ->
     two prefill calls, two traces, everything still greedy-exact."""
     cfg, m, params = smol
-    eng = ServingEngine(m, params, ServeConfig(max_batch=4, max_len=64))
+    eng = ServingEngine(m, params, ServeConfig(max_batch=4, max_len=64,
+                                               chunked_prefill=False,
+                                               bucket_max_wait=0))
     rng = np.random.default_rng(8)
     prompts = [rng.integers(0, cfg.vocab, n).astype(np.int32)
                for n in (8, 12, 20, 28)]           # buckets 16, 16, 32, 32
