@@ -13,11 +13,19 @@ every step).  Seeded faults are injected through the shared
 * **stuck-build** -- provisioning requests hang; imperatively they clog the
   pool's headroom forever, the converger times them out, cancels, backs off
   and retries.
+* **brownout** -- builds land, but 8x later than promised; the converger
+  sees them overdue against the *promised* landing time, cancels the
+  latest-landing capacity first and relaunches, while the imperative
+  controller just waits out the inflated delay.
+* **corr-loss** -- AZ-scale events take half the live fleet in one step
+  (a covariance no independent per-unit hazard produces); healing a bulk
+  loss is where next-step reconciliation pays most.
 
 The drill asserts the converger's SLA violation rate is *strictly* lower in
-both scenarios, that the fault-free run is bit-for-bit identical between the
-two modes, and that replaying the convergence audit log reproduces the final
-per-pool fleet state.  Emitted as ``benchmarks/artifacts/convergence_faults.json``.
+every fault scenario, that the fault-free run is bit-for-bit identical
+between the two modes, and that replaying the convergence audit log
+reproduces the final per-pool fleet state.  Emitted as
+``benchmarks/artifacts/convergence_faults.json``.
 """
 from __future__ import annotations
 
@@ -37,6 +45,13 @@ ARTIFACT = os.path.join(os.path.dirname(__file__), "artifacts",
 #: fault windows sized to land inside the workload's two bursts (400 s, 800 s)
 LOSS = (FaultSpec(loss_rate=1 / 40.0, start_s=380.0, end_s=900.0, seed=13),)
 STUCK = (FaultSpec(stuck_p=0.9, start_s=350.0, end_s=900.0, seed=13),)
+#: builds queued in the window land 8x late (45 s promise -> 360 s); the
+#: window ends mid-burst so cancel-and-relaunch beats waiting it out
+BROWNOUT = (FaultSpec(brownout_factor=8.0, start_s=350.0, end_s=500.0,
+                      seed=13),)
+#: ~1 AZ-scale event per minute of window, each taking half the live fleet
+CORR = (FaultSpec(corr_loss_p=1 / 60.0, corr_loss_frac=0.5, start_s=380.0,
+                  end_s=900.0, seed=13),)
 
 CONVERGE = ConvergerConfig(build_timeout_s=75.0, backoff_base_s=10.0,
                            backoff_max_s=60.0, max_retries=10)
@@ -46,6 +61,13 @@ CONVERGE = ConvergerConfig(build_timeout_s=75.0, backoff_base_s=10.0,
 #: zero until something cancels them (which only the converger does)
 POOL = (UnitPool("replica", provision_delay_s=45.0, min_units=1,
                  max_units=12),)
+
+#: the brownout drill runs against a TIGHT ceiling: browned-out builds sit in
+#: pending for 360 s and clog all headroom, so the imperative controller
+#: cannot queue healthy replacements once the window closes -- only the
+#: converger's overdue-cancel reclaims the ceiling before the burst decays
+BROWNOUT_POOL = (UnitPool("replica", provision_delay_s=45.0, min_units=1,
+                          max_units=4),)
 
 
 class _RestartFloor(Policy):
@@ -74,9 +96,9 @@ class _RestartFloor(Policy):
         return self.inner.describe() + "+restart"
 
 
-def _run(n: int, *, faults=None, convergence: bool):
+def _run(n: int, *, faults=None, convergence: bool, pools=POOL):
     from benchmarks.elastic_serving import _workload
-    cfg = ClusterConfig(pools=POOL, faults=faults, convergence=convergence,
+    cfg = ClusterConfig(pools=pools, faults=faults, convergence=convergence,
                         converge=CONVERGE if convergence else None)
     cluster = ElasticCluster(cfg, _RestartFloor(ThresholdPolicy(0.7)),
                              _workload(n=n))
@@ -97,9 +119,11 @@ def run(quick: bool = False) -> Rows:
 
     scenarios = {}
     for name, faults in (("fault-free", None), ("unit-loss", LOSS),
-                         ("stuck-build", STUCK)):
-        imp, _ = _run(n, faults=faults, convergence=False)
-        conv, ctrl = _run(n, faults=faults, convergence=True)
+                         ("stuck-build", STUCK), ("brownout", BROWNOUT),
+                         ("corr-loss", CORR)):
+        pools = BROWNOUT_POOL if name == "brownout" else POOL
+        imp, _ = _run(n, faults=faults, convergence=False, pools=pools)
+        conv, ctrl = _run(n, faults=faults, convergence=True, pools=pools)
         scenarios[name] = (imp, conv)
         for mode, rep in (("imperative", imp), ("converger", conv)):
             rows.add(f"{name}.{mode}.viol_pct", 100.0 * rep.violation_rate)
@@ -111,10 +135,20 @@ def run(quick: bool = False) -> Rows:
         assert replay(ctrl.audit.records) == final, name
         rows.add(f"{name}.audit_records", float(len(ctrl.audit.records)))
         if faults is not None:
-            m = sum(ms.lost + ms.cancelled
-                    for ms in ctrl.plan.meters().values())
-            assert m > 0, f"{name}: no faults actually fired"
-            rows.add(f"{name}.faults_fired", float(m))
+            fired = len(ctrl.plan.fault_events)
+            assert fired > 0, f"{name}: no faults actually fired"
+            rows.add(f"{name}.faults_fired", float(fired))
+            kinds = {e.kind for e in ctrl.plan.fault_events}
+            if name == "brownout":
+                # builds really were browned out AND the converger gave up
+                # on some of the late-landing capacity rather than waiting
+                assert "brownout" in kinds, "no build was browned out"
+                assert ctrl.plan.meters()["replica"].cancelled > 0, \
+                    "converger never cancelled an overdue browned-out build"
+            if name == "corr-loss":
+                assert "corr_loss" in kinds, "no AZ-scale event fired"
+                assert ctrl.plan.meters()["replica"].lost > 1, \
+                    "corr-loss never took multiple units"
 
     # fault-free: convergence mode is bit-for-bit the imperative controller
     imp, conv = scenarios["fault-free"]
@@ -122,7 +156,7 @@ def run(quick: bool = False) -> Rows:
     rows.add("fault-free.parity", 1.0, "fingerprints identical")
 
     # under faults: the converger restores SLA, the baseline stays degraded
-    for name in ("unit-loss", "stuck-build"):
+    for name in ("unit-loss", "stuck-build", "brownout", "corr-loss"):
         imp, conv = scenarios[name]
         assert conv.violation_rate < imp.violation_rate, (
             f"{name}: converger {conv.violation_rate:.4f} !< "
@@ -133,8 +167,8 @@ def run(quick: bool = False) -> Rows:
     os.makedirs(os.path.dirname(ARTIFACT), exist_ok=True)
     payload = {
         "description": "imperative vs convergence control plane under seeded "
-                       "unit-loss and stuck-build faults (elastic backend, "
-                       "threshold70 policy)",
+                       "unit-loss, stuck-build, brownout and correlated-loss "
+                       "faults (elastic backend, threshold70 policy)",
         "n_requests": n,
         "scenarios": {
             name: {mode: {"violation_rate": rep.violation_rate,

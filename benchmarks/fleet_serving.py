@@ -1,0 +1,250 @@
+"""Replica-fleet smoke benchmark: real multi-engine serving actuated by the
+convergence plane, with HARD gates on the three properties the fleet layer
+exists for (scripts/check.sh runs this in the full verify pass):
+
+* **elastic throughput** -- aggregate WARM tokens/s over 2 replicas must be
+  >= 1.5x the single-replica rate on the same workload.  On the time-sliced
+  single-core runner each replica's rate is its tokens over ITS OWN stepping
+  wall time (the per-host rate), so the fleet aggregate is the sum across
+  replicas -- a scale-out that silently serialized through one engine, or a
+  router that starves the second replica, fails CI rather than just getting
+  slower;
+* **lossless drain** -- a mid-burst DrainUnit (through the real
+  FleetExecutor + CapacityPlan path) must migrate every in-flight request
+  onto the survivor with BIT-IDENTICAL final outputs vs an unmigrated
+  reference run, and the page free-lists of both engines must conserve
+  (drained side back to empty, survivor invariant-clean);
+* **measured provisioning** -- the fleet's RunReport must carry a
+  provisioning delay measured at spawn (checkpoint load + remesh + engine
+  build + probe-decode compile), not the configured guess.
+
+Every run writes ``benchmarks/artifacts/BENCH_fleet.json`` (aggregate and
+per-replica throughput, migration counts, measured vs configured delay)
+which CI uploads alongside the other artifacts.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+
+import numpy as np
+
+from benchmarks.common import Rows, banner
+
+ARTIFACT = os.path.join(os.path.dirname(__file__), "artifacts",
+                        "BENCH_fleet.json")
+
+WALL_BOUND_S = 300.0          # generous CPU bound; normal runs are ~5x faster
+SCALE_GATE = 1.5              # hard floor on 2-replica aggregate speedup
+CONFIGURED_DELAY_S = 3.0      # the deliberate wrong guess phase C must beat
+
+
+def _workload(cfg, rng, n):
+    from repro.serving import Request
+    reqs = []
+    for i in range(n):
+        plen = int(rng.integers(6, 48))
+        reqs.append(Request(
+            rid=i, prompt=rng.integers(0, cfg.vocab, plen).astype(np.int32),
+            max_new_tokens=int(rng.integers(4, 12))))
+    return reqs
+
+
+def _make_pool(n_replicas: int, ckpt_dir: str):
+    import jax
+
+    from repro.checkpoint import CheckpointManager, save_checkpoint
+    from repro.configs import get_smoke_config
+    from repro.models import build_model
+    from repro.serving import ServeConfig
+    from repro.serving.fleet import ReplicaPool
+
+    cfg = get_smoke_config("smollm-135m")
+    model = build_model(cfg)
+    mgr = CheckpointManager(ckpt_dir, keep=2, async_save=False)
+    if mgr.latest() is None:
+        params = model.init_params(jax.random.key(0))
+        save_checkpoint(os.path.join(ckpt_dir, "ckpt_00000001.npz"),
+                        params, step=1)
+    pool = ReplicaPool(model, mgr,
+                       ServeConfig(max_batch=4, max_len=128, decode_steps=4))
+    for _ in range(n_replicas):
+        rep, _ = pool.spawn()
+        pool.serving.append(rep)
+    return cfg, pool
+
+
+def _drive_drained(pool, router, *, max_steps=10_000) -> None:
+    """Step the whole fleet until every engine and backlog is empty."""
+    for t in range(max_steps):
+        router.dispatch(float(t))
+        for r in list(pool.serving):
+            r.step(float(t), decode_steps=r.eng.decode_steps)
+        if not router.backlog and not any(r.eng.n_in_system
+                                          for r in pool.serving):
+            return
+    raise RuntimeError("fleet failed to drain")
+
+
+def _aggregate_tokens_per_s(pool) -> float:
+    return sum(r.tokens_per_busy_s for r in pool.serving + pool.retired
+               if r.busy_s > 0)
+
+
+def _phase_throughput(ckpt_dir: str, n: int, rows: Rows) -> dict:
+    """1 vs 2 replicas over the same workload: the fleet aggregate must
+    scale.  Spawn's probe decode leaves each replica warm, so the measured
+    window never includes compile."""
+    from repro.serving.fleet import FleetRouter
+    out = {}
+    for n_rep in (1, 2):
+        cfg, pool = _make_pool(n_rep, ckpt_dir)
+        router = FleetRouter(pool)
+        for r in _workload(cfg, np.random.default_rng(1), n):
+            router.submit(r)
+        _drive_drained(pool, router)
+        done = sum(len(r.eng.completed) for r in pool.serving)
+        assert done == n, f"{n_rep}-replica fleet dropped requests {done}/{n}"
+        for r in pool.serving:
+            r.eng.kv.check_invariants()
+        agg = _aggregate_tokens_per_s(pool)
+        per = {f"replica{r.rix}": {"tokens": r.tokens, "busy_s": r.busy_s,
+                                   "tokens_per_s": r.tokens_per_busy_s}
+               for r in pool.serving}
+        out[n_rep] = {"aggregate_tokens_per_s": agg, "per_replica": per}
+        rows.add(f"replicas{n_rep}.aggregate_tokens_per_s", agg)
+        # the router must actually spread load: with 2 replicas both serve
+        if n_rep == 2:
+            assert all(r.tokens > 0 for r in pool.serving), (
+                "router starved a replica: "
+                + str({r.rix: r.tokens for r in pool.serving}))
+    speedup = (out[2]["aggregate_tokens_per_s"]
+               / out[1]["aggregate_tokens_per_s"])
+    out["speedup"] = speedup
+    rows.add("scale_speedup_2x", speedup, f"gate: >= {SCALE_GATE}x")
+    assert speedup >= SCALE_GATE, (
+        f"2-replica aggregate {out[2]['aggregate_tokens_per_s']:.1f} tok/s is "
+        f"only {speedup:.2f}x the single replica -- fleet scale-out regressed")
+    return out
+
+
+def _phase_drain_migration(ckpt_dir: str, n: int, rows: Rows) -> dict:
+    """Mid-burst DrainUnit through the FleetExecutor: every in-flight
+    request migrates to the survivor and finishes with the exact tokens the
+    unmigrated reference produced."""
+    from repro.core.scaling import CapacityPlan, UnitPool
+    from repro.serving.fleet import FLEET_POOL, FleetExecutor, FleetRouter
+
+    # reference: the same workload on one replica, no migration
+    cfg, ref_pool = _make_pool(1, ckpt_dir)
+    ref_router = FleetRouter(ref_pool)
+    reqs = _workload(cfg, np.random.default_rng(2), n)
+    for r in reqs:
+        ref_router.submit(r)
+    _drive_drained(ref_pool, ref_router)
+    reference = {r.rid: list(r.output)
+                 for r in ref_pool.serving[0].eng.completed}
+
+    # fleet of 2, drained to 1 mid-burst through the executor + plan
+    cfg, pool = _make_pool(2, ckpt_dir)
+    plan = CapacityPlan((UnitPool(FLEET_POOL, min_units=1, max_units=4),),
+                        starting_units=2)
+    executor = FleetExecutor(pool, plan)
+    router = FleetRouter(pool)
+    reqs2 = _workload(cfg, np.random.default_rng(2), n)
+    for r in reqs2:
+        router.submit(r)
+    for t in range(3):                      # both replicas mid-decode
+        router.dispatch(float(t))
+        for r in list(pool.serving):
+            r.step(float(t), decode_steps=2)
+    victim = pool.serving[-1]
+    in_flight = len(victim.eng.active)
+    assert in_flight > 0, "drain happened with nothing in flight -- no test"
+    took = executor.drain(FLEET_POOL, 1, 3.0)
+    assert took == 1 and plan.total_live == 1
+    assert victim not in pool.serving and not victim.eng.active
+    victim.eng.kv.check_invariants()        # drained side: free list whole
+    assert int(victim.eng.kv.held.sum()) == 0 and \
+        int(victim.eng.kv.worst.sum()) == 0, "drained engine leaked pages"
+    _drive_drained(pool, router)
+    survivor = pool.serving[0]
+    survivor.eng.kv.check_invariants()      # survivor side conserves too
+    done = {r.rid: list(r.output)
+            for rep in pool.serving + pool.retired
+            for r in rep.eng.completed}
+    assert len(done) == n, f"drain lost requests: {len(done)}/{n}"
+    mismatches = [rid for rid in reference if done[rid] != reference[rid]]
+    assert not mismatches, (
+        f"migrated outputs diverged from the unmigrated reference for "
+        f"rids {mismatches[:5]} -- bit-exact drain is broken")
+    rows.add("drain.in_flight_migrated", float(in_flight),
+             "requests mid-decode on the drained replica")
+    rows.add("drain.bit_identical", 1.0, f"all {n} outputs match reference")
+    return {"in_flight_migrated": in_flight, "n_requests": n,
+            "bit_identical": True}
+
+
+def _phase_measured_delay(ckpt_dir: str, n: int, rows: Rows) -> dict:
+    """FleetBackend end-to-end: the RunReport's provisioning delay is the
+    spawn-measured one, not the configured guess."""
+    cfg, pool = _make_pool(0, ckpt_dir)
+    workload = _workload(cfg, np.random.default_rng(3), n)
+    for i, r in enumerate(workload):
+        r.arrival_s = float(i // 4)
+    from repro.serving.fleet import FleetBackend
+    be = FleetBackend(pool, workload, sla_s=30.0, horizon_s=float(n),
+                      starting_replicas=1, max_replicas=3,
+                      provision_delay_s=CONFIGURED_DELAY_S,
+                      adapt_period_s=2.0, app_window_s=4.0, decode_steps=2)
+    rep = be.run()
+    assert rep.n_done == n, f"fleet backend dropped requests {rep.n_done}/{n}"
+    measured = rep.pool_provision_delay_s.get("replica")
+    assert measured is not None and measured > 0.0, (
+        "RunReport carries no measured provisioning delay -- the executor "
+        "stopped calibrating from real spawns")
+    assert abs(measured - CONFIGURED_DELAY_S) > 1e-6, (
+        "measured delay equals the configured guess exactly -- suspicious")
+    assert "measured_delay_s.replica" in rep.summary()
+    rows.add("measured_delay_s", measured,
+             f"configured guess was {CONFIGURED_DELAY_S}s")
+    rows.add("fleet_peak_replicas", float(rep.max_units))
+    return {"measured_delay_s": measured,
+            "configured_delay_s": CONFIGURED_DELAY_S,
+            "peak_replicas": rep.max_units, "n_done": rep.n_done}
+
+
+def run(quick: bool = False) -> Rows:
+    import time
+    banner("Replica fleet (spawn / route / drain-migrate / measured delay)")
+    rows = Rows("fleet_serving")
+    n = 16 if quick else 32
+    t0 = time.perf_counter()
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        thr = _phase_throughput(ckpt_dir, n, rows)
+        mig = _phase_drain_migration(ckpt_dir, max(n // 2, 8), rows)
+        dly = _phase_measured_delay(ckpt_dir, min(n, 16), rows)
+    wall = time.perf_counter() - t0
+    rows.add("wall_s", wall)
+    assert wall < WALL_BOUND_S, f"fleet smoke took {wall:.1f}s > {WALL_BOUND_S}s"
+
+    os.makedirs(os.path.dirname(ARTIFACT), exist_ok=True)
+    with open(ARTIFACT, "w") as f:
+        json.dump({
+            "workload": {"n_requests": n, "quick": quick,
+                         "arch": "smollm-135m (smoke)", "max_batch": 4,
+                         "max_len": 128,
+                         "timing": "warm (spawn probe compiles the loop)"},
+            "throughput": {str(k): v for k, v in thr.items()},
+            "scale_gate": SCALE_GATE,
+            "drain_migration": mig,
+            "measured_delay": dly,
+            "wall_s": wall,
+        }, f, indent=2)
+    print(f"[artifact] {ARTIFACT}")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=bool(int(os.environ.get("BENCH_QUICK", "0"))))

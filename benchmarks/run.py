@@ -19,6 +19,7 @@ MODULES = [
     "headline_claims",
     "elastic_serving",
     "serving_engine",
+    "fleet_serving",
     "policy_table",
     "convergence_faults",
     "kernels_bench",

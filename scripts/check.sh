@@ -63,4 +63,10 @@ echo "==        floors vs the pre-overlap baseline; writes BENCH_serving.json) =
 timeout 300 python -m benchmarks.run --smoke --only serving_engine
 
 echo
+echo "== smoke: replica fleet (2-replica 1.5x aggregate tokens/s floor, bit-"
+echo "==        identical drain migration, spawn-measured provisioning delay;"
+echo "==        writes BENCH_fleet.json) =="
+timeout 420 env BENCH_QUICK=1 python -m benchmarks.fleet_serving
+
+echo
 echo "check.sh: ALL OK"

@@ -1,9 +1,10 @@
 from repro.checkpoint.store import (
+    OK_SUFFIX,
     CheckpointManager,
     load_checkpoint,
     restore_resharded,
     save_checkpoint,
 )
 
-__all__ = ["save_checkpoint", "load_checkpoint", "restore_resharded",
-           "CheckpointManager"]
+__all__ = ["OK_SUFFIX", "save_checkpoint", "load_checkpoint",
+           "restore_resharded", "CheckpointManager"]

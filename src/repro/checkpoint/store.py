@@ -25,6 +25,10 @@ import numpy as np
 
 SEP = "/"
 _BF16 = "__bf16__"     # npz has no native bfloat16: stored as uint16 bit pattern
+#: terminal marker written LAST by save_checkpoint: a checkpoint without it
+#: was interrupted mid-save (crash between the npz rename and the sidecar,
+#: or a foreign partial file) and must never be restored
+OK_SUFFIX = ".ok"
 
 
 def _flatten(tree) -> dict[str, np.ndarray]:
@@ -63,6 +67,10 @@ def save_checkpoint(path: str, tree, *, step: int = 0, extra: dict | None = None
     meta = {"step": step, **(extra or {})}
     with open(path + ".meta.json", "w") as f:
         json.dump(meta, f)
+    # terminal marker: written only after the npz AND the sidecar are down,
+    # so readers can distinguish a complete checkpoint from a torn one
+    with open(path + OK_SUFFIX, "w") as f:
+        f.write("ok\n")
     return path
 
 
@@ -97,8 +105,14 @@ class CheckpointManager:
         return os.path.join(self.dir, f"ckpt_{step:08d}.npz")
 
     def latest(self) -> str | None:
-        cks = sorted(f for f in os.listdir(self.dir)
-                     if f.startswith("ckpt_") and f.endswith(".npz"))
+        """Newest COMPLETE checkpoint: files missing their terminal marker
+        (interrupted saves, torn copies) are skipped, so a crash mid-save
+        falls back to the previous good checkpoint instead of restoring
+        garbage."""
+        cks = sorted(
+            f for f in os.listdir(self.dir)
+            if f.startswith("ckpt_") and f.endswith(".npz")
+            and os.path.exists(os.path.join(self.dir, f + OK_SUFFIX)))
         return os.path.join(self.dir, cks[-1]) if cks else None
 
     def wait(self):
@@ -126,7 +140,7 @@ class CheckpointManager:
         cks = sorted(f for f in os.listdir(self.dir)
                      if f.startswith("ckpt_") and f.endswith(".npz"))
         for f in cks[: -self.keep]:
-            for suffix in ("", ".meta.json"):
+            for suffix in ("", ".meta.json", OK_SUFFIX):
                 try:
                     os.remove(os.path.join(self.dir, f + suffix))
                 except OSError:
@@ -141,5 +155,5 @@ class CheckpointManager:
         return load_checkpoint(path, template)
 
 
-__all__ = ["save_checkpoint", "load_checkpoint", "restore_resharded",
-           "CheckpointManager"]
+__all__ = ["OK_SUFFIX", "save_checkpoint", "load_checkpoint",
+           "restore_resharded", "CheckpointManager"]

@@ -18,7 +18,9 @@ plane is bit-for-bit equivalent to the imperative path (pinned by parity
 tests against the simulator goldens).
 """
 from .audit import AuditLog, replay
-from .converger import Converger, ConvergerConfig, StepOutcome
+from .converger import (
+    Converger, ConvergerConfig, PlanExecutor, StepExecutor, StepOutcome,
+)
 from .desired import DesiredGroup, PoolTarget, derive_desired, observed_group
 from .faults import FaultInjector, FaultSpec
 from .groups import (
@@ -38,8 +40,10 @@ __all__ = [
     "FaultInjector",
     "FaultSpec",
     "LaunchUnit",
+    "PlanExecutor",
     "PoolTarget",
     "ReplaceUnhealthy",
+    "StepExecutor",
     "ScalingGroup",
     "ScheduledChange",
     "Step",

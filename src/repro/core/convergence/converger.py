@@ -24,6 +24,7 @@ handling -- an under-applied step is just diff the next call re-plans.
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Protocol, runtime_checkable
 
 from repro.core.scaling.capacity import CapacityPlan
 
@@ -32,6 +33,44 @@ from .desired import DesiredGroup
 from .planner import (
     CancelPending, DrainUnit, LaunchUnit, ReplaceUnhealthy, Step, plan_steps,
 )
+
+
+@runtime_checkable
+class StepExecutor(Protocol):
+    """What a converger actuates steps against.
+
+    The default :class:`PlanExecutor` mutates CapacityPlan counters (the
+    virtual capacity model); ``repro.serving.fleet.FleetExecutor`` spawns and
+    drains real ServingEngine replicas and keeps the plan's ledger in sync as
+    a side effect.  Each method returns the count actually applied (for
+    ``replace_unhealthy``: ``(drained, queued)``)."""
+
+    def launch(self, pool: str, count: int, now: float) -> int: ...
+    def cancel_pending(self, pool: str, count: int, now: float) -> int: ...
+    def drain(self, pool: str, count: int, now: float) -> int: ...
+    def replace_unhealthy(self, pool: str, count: int,
+                          now: float) -> tuple[int, int]: ...
+
+
+class PlanExecutor:
+    """Default executor: steps mutate the CapacityPlan's virtual counters
+    (exactly the pre-fleet behavior, which keeps the golden parity tests)."""
+
+    def __init__(self, plan: CapacityPlan):
+        self.plan = plan
+
+    def launch(self, pool: str, count: int, now: float) -> int:
+        return self.plan.request(pool, count, now)
+
+    def cancel_pending(self, pool: str, count: int, now: float) -> int:
+        return self.plan.cancel_pending(pool, count)
+
+    def drain(self, pool: str, count: int, now: float) -> int:
+        return self.plan.drain(pool, count)
+
+    def replace_unhealthy(self, pool: str, count: int,
+                          now: float) -> tuple[int, int]:
+        return self.plan.replace_unhealthy(pool, count, now)
 
 
 @dataclass(frozen=True)
@@ -79,10 +118,12 @@ class Converger:
     """Executes convergence steps against a :class:`CapacityPlan`."""
 
     def __init__(self, plan: CapacityPlan, cfg: ConvergerConfig | None = None,
-                 audit: AuditLog | None = None):
+                 audit: AuditLog | None = None,
+                 executor: StepExecutor | None = None):
         self.plan = plan
         self.cfg = cfg or ConvergerConfig()
         self.audit = audit
+        self.executor: StepExecutor = executor or PlanExecutor(plan)
         self.desired: DesiredGroup | None = None
         self._attempts: dict[str, int] = {}     # failed launch attempts
         self._gate: dict[str, float] = {}       # no launches before this time
@@ -149,13 +190,13 @@ class Converger:
     def _execute(self, step: Step, now: float) -> StepOutcome:
         queued = 0
         if isinstance(step, LaunchUnit):
-            applied = self.plan.request(step.pool, step.count, now)
+            applied = self.executor.launch(step.pool, step.count, now)
         elif isinstance(step, CancelPending):
-            applied = self.plan.cancel_pending(step.pool, step.count)
+            applied = self.executor.cancel_pending(step.pool, step.count, now)
         elif isinstance(step, DrainUnit):
-            applied = self.plan.drain(step.pool, step.count)
+            applied = self.executor.drain(step.pool, step.count, now)
         elif isinstance(step, ReplaceUnhealthy):
-            applied, queued = self.plan.replace_unhealthy(
+            applied, queued = self.executor.replace_unhealthy(
                 step.pool, step.count, now)
             self._replace_gate[step.pool] = now + self.cfg.replace_backoff_s
         else:  # pragma: no cover - the planner only emits the four kinds
@@ -202,4 +243,5 @@ class Converger:
         self._last_meters = meters
 
 
-__all__ = ["Converger", "ConvergerConfig", "StepOutcome"]
+__all__ = ["Converger", "ConvergerConfig", "PlanExecutor", "StepExecutor",
+           "StepOutcome"]

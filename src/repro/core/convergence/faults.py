@@ -13,6 +13,15 @@ item names (the scenarios an imperative delta controller cannot express):
   clogs the imperative baseline.
 * **flapping health** -- live units oscillate between healthy and unhealthy
   with hazards ``flap_rate`` / ``heal_rate``.
+* **provisioning brownouts** -- builds land, but ``brownout_factor`` times
+  later than promised (degraded control plane, capacity crunch behind the
+  API).  Unlike stuck builds these eventually arrive; the converger sees
+  them as overdue-but-alive and must decide between waiting and relaunching.
+* **correlated loss** -- one AZ-scale event takes a ``corr_loss_frac``
+  fraction of EVERY affected pool's live units in the same step (probability
+  ``corr_loss_p`` per step while the window is active).  Independent
+  per-unit hazards can never produce this covariance, which is what makes
+  it the interesting recovery drill.
 
 Each :class:`FaultSpec` is windowed (``start_s``..``end_s``) and carries its
 own seed; the injector keeps one RNG stream per (spec, fault-kind) so the
@@ -38,6 +47,9 @@ class FaultSpec:
     stuck_p: float = 0.0         # probability a queued build never lands
     flap_rate: float = 0.0       # per-unit hazard healthy -> unhealthy, 1/s
     heal_rate: float = 0.0       # per-unit hazard unhealthy -> healthy, 1/s
+    brownout_factor: float = 1.0  # provisioning-delay inflation (1.0 = none)
+    corr_loss_p: float = 0.0     # per-step probability of an AZ-scale event
+    corr_loss_frac: float = 1.0  # fraction of live units the event takes
     start_s: float = 0.0
     end_s: float = math.inf
     seed: int = 0
@@ -48,6 +60,15 @@ class FaultSpec:
                 raise ValueError(f"{f} must be >= 0, got {getattr(self, f)}")
         if not 0.0 <= self.stuck_p <= 1.0:
             raise ValueError(f"stuck_p must be in [0, 1], got {self.stuck_p}")
+        if self.brownout_factor < 1.0:
+            raise ValueError(f"brownout_factor must be >= 1, got "
+                             f"{self.brownout_factor}")
+        if not 0.0 <= self.corr_loss_p <= 1.0:
+            raise ValueError(f"corr_loss_p must be in [0, 1], got "
+                             f"{self.corr_loss_p}")
+        if not 0.0 < self.corr_loss_frac <= 1.0:
+            raise ValueError(f"corr_loss_frac must be in (0, 1], got "
+                             f"{self.corr_loss_frac}")
         if self.end_s < self.start_s:
             raise ValueError(f"end_s {self.end_s} < start_s {self.start_s}")
 
@@ -67,14 +88,19 @@ class FaultInjector:
     def __init__(self, specs):
         self.specs = tuple(specs)
         self._rngs: list[dict[str, np.random.Generator]] = []
+        self._corr_cache: dict[tuple[int, float], bool] = {}
         self.reset()
 
     def reset(self) -> None:
+        # "corr" is appended so the (seed, index) streams of the original
+        # kinds stay bit-identical to pre-brownout injectors
         self._rngs = [
             {kind: np.random.default_rng((spec.seed, i))
-             for i, kind in enumerate(("loss", "stuck", "flap", "heal"))}
+             for i, kind in enumerate(("loss", "stuck", "flap", "heal",
+                                       "corr"))}
             for spec in self.specs
         ]
+        self._corr_cache = {}
 
     def stuck_builds(self, pool: str, count: int, now: float) -> int:
         """How many of ``count`` units just queued for ``pool`` will stick."""
@@ -104,6 +130,38 @@ class FaultInjector:
                 p = -math.expm1(-spec.heal_rate * step_s)
                 healed += int(rngs["heal"].binomial(unhealthy - healed, p))
         return lost, flapped, healed
+
+    def delay_factor(self, pool: str, now: float) -> float:
+        """Provisioning-delay inflation for a build queued on ``pool`` now
+        (product of all active brownout windows; 1.0 = healthy)."""
+        factor = 1.0
+        for spec in self.specs:
+            if spec.brownout_factor > 1.0 and spec.active(pool, now):
+                factor *= spec.brownout_factor
+        return factor
+
+    def corr_loss(self, pool: str, live: int, now: float,
+                  step_s: float) -> int:
+        """Units of ``pool`` taken by correlated AZ-scale events this step.
+
+        Whether an event fires is drawn ONCE per (spec, step) and cached, so
+        every pool a spec covers is hit in the same step -- that shared draw
+        is the correlation.  ``step_s`` is accepted for signature symmetry
+        with :meth:`step_draws`; the event probability is per step.
+        """
+        del step_s
+        lost = 0
+        for i, (spec, rngs) in enumerate(zip(self.specs, self._rngs)):
+            if spec.corr_loss_p <= 0.0 or not spec.active(pool, now):
+                continue
+            key = (i, float(now))
+            fired = self._corr_cache.get(key)
+            if fired is None:
+                fired = bool(rngs["corr"].random() < spec.corr_loss_p)
+                self._corr_cache[key] = fired
+            if fired:
+                lost += math.ceil(spec.corr_loss_frac * max(live - lost, 0))
+        return min(lost, live)
 
 
 __all__ = ["FaultInjector", "FaultSpec"]

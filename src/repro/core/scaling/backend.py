@@ -51,6 +51,9 @@ class RunReport:
     pool_unit_seconds: dict[str, float] = field(default_factory=dict)
     pool_cost_rates: dict[str, float] = field(default_factory=dict)
     n_revocations: int = 0
+    # measured provisioning delay per pool (only pools an executor calibrated
+    # from a real spawn appear; configured guesses never show up here)
+    pool_provision_delay_s: dict[str, float] = field(default_factory=dict)
     _summary_cache: dict[str, Any] | None = field(
         default=None, init=False, repr=False, compare=False)
 
@@ -152,6 +155,8 @@ class RunReport:
             for name, us in sorted(self.pool_unit_seconds.items()):
                 out[f"unit_hours.{name}"] = us / 3600.0
             out["n_revocations"] = self.n_revocations
+        for name, d in sorted(self.pool_provision_delay_s.items()):
+            out[f"measured_delay_s.{name}"] = d
         out.update(self.extra)
         self._summary_cache = out
         return dict(out)

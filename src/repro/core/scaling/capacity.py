@@ -167,8 +167,8 @@ class Sla:
 class _PoolState:
     """Mutable runtime state of one pool inside a CapacityPlan."""
 
-    __slots__ = ("pool", "live", "pending", "stuck", "unhealthy",
-                 "unit_seconds", "meters", "rng")
+    __slots__ = ("pool", "live", "pending", "stuck", "slow", "unhealthy",
+                 "unit_seconds", "meters", "rng", "delay_override")
 
     def __init__(self, pool: UnitPool, live: int):
         self.pool = pool
@@ -177,15 +177,30 @@ class _PoolState:
         # builds that will never land (injected stuck_build faults); they
         # occupy pending capacity -- and ceiling headroom -- until cancelled
         self.stuck: list[tuple[float, int]] = []     # (expected_at, count)
+        # builds landing later than promised (provisioning brownouts):
+        # (expected_at, ready_at, count) -- overdue relative to expected_at,
+        # so the converger can observe the brownout, but they DO land
+        self.slow: list[tuple[float, float, int]] = []
         self.unhealthy = 0
         self.unit_seconds = 0.0
         self.meters = PoolMeters()
         self.rng = np.random.default_rng(pool.revoke_seed)
+        # measured provisioning delay (engine-backed pools calibrate this
+        # from real spawn wall time); None means the configured value rules
+        self.delay_override: float | None = None
+
+    @property
+    def delay_s(self) -> float:
+        """Effective provisioning delay: measured when calibrated, else the
+        configured ``UnitPool.provision_delay_s``."""
+        return (self.delay_override if self.delay_override is not None
+                else self.pool.provision_delay_s)
 
     @property
     def n_pending(self) -> int:
         return (sum(c for _, c in self.pending)
-                + sum(c for _, c in self.stuck))
+                + sum(c for _, c in self.stuck)
+                + sum(c for _, _, c in self.slow))
 
     @property
     def revoked(self) -> int:
@@ -193,7 +208,8 @@ class _PoolState:
 
     def cancel(self, count: int) -> int:
         """Cancel up to ``count`` pending builds: stuck ones first (they are
-        worthless, oldest first so the most-overdue go), then healthy pending
+        worthless, oldest first so the most-overdue go), then browned-out
+        builds newest-first (they land latest), then healthy pending
         newest-first (same order release() always used)."""
         left = int(count)
         while left > 0 and self.stuck:
@@ -204,6 +220,14 @@ class _PoolState:
                 self.stuck.pop(0)
             else:
                 self.stuck[0] = (at, c - take)
+        while left > 0 and self.slow:
+            exp, rdy, c = self.slow[-1]
+            take = min(c, left)
+            left -= take
+            if take == c:
+                self.slow.pop()
+            else:
+                self.slow[-1] = (exp, rdy, c - take)
         while left > 0 and self.pending:
             at, c = self.pending[-1]
             take = min(c, left)
@@ -294,6 +318,15 @@ class CapacityPlan:
                     st.live += admit
                     st.meters.landed += admit
                     st.pending = [p for p in st.pending if p[0] > now]
+            if st.slow:
+                ready = sum(c for _, rdy, c in st.slow if rdy <= now)
+                if ready:
+                    admit = min(ready, max(st.pool.max_units - st.live, 0))
+                    if admit < ready:
+                        st.meters.overflow_landed += ready - admit
+                    st.live += admit
+                    st.meters.landed += admit
+                    st.slow = [e for e in st.slow if e[1] > now]
             if st.pool.revoke_rate > 0.0 and st.live > 0:
                 p_rev = -math.expm1(-st.pool.revoke_rate * step_s)
                 k = int(st.rng.binomial(st.live, p_rev))
@@ -330,6 +363,20 @@ class CapacityPlan:
                 self.fault_events.append(
                     FaultEvent(time=now, pool=st.pool.name, kind="heal",
                                count=healed))
+        # correlated multi-unit loss (AZ-scale event): drawn once per step
+        # across pools, applied after the independent unit_loss draws so
+        # their RNG streams stay aligned with corr-free runs
+        corr_fn = getattr(self._faults, "corr_loss", None)
+        if corr_fn is not None:
+            corr = min(int(corr_fn(st.pool.name, st.live, now, step_s)),
+                       st.live)
+            if corr:
+                st.live -= corr
+                st.meters.lost += corr
+                st.unhealthy = min(st.unhealthy, st.live)
+                self.fault_events.append(
+                    FaultEvent(time=now, pool=st.pool.name, kind="corr_loss",
+                               count=corr))
 
     # -- actuation ------------------------------------------------------------------
     def request(self, name: str, count: int, now: float) -> int:
@@ -349,7 +396,7 @@ class CapacityPlan:
             st.meters.overflow_request += count - queued
         if queued <= 0:
             return 0
-        at = now + st.pool.provision_delay_s
+        at = now + st.delay_s
         stuck = (self._faults.stuck_builds(st.pool.name, queued, now)
                  if self._faults is not None else 0)
         if stuck:
@@ -357,8 +404,20 @@ class CapacityPlan:
             self.fault_events.append(
                 FaultEvent(time=now, pool=st.pool.name, kind="stuck_build",
                            count=stuck))
-        if queued - stuck:
-            st.pending.append((at, queued - stuck))
+        healthy = queued - stuck
+        if healthy:
+            factor_fn = getattr(self._faults, "delay_factor", None) \
+                if self._faults is not None else None
+            factor = float(factor_fn(st.pool.name, now)) if factor_fn else 1.0
+            if factor > 1.0:
+                # provisioning brownout: the build WILL land, but later than
+                # promised; overdue detection keys off the expected time
+                st.slow.append((at, now + st.delay_s * factor, healthy))
+                self.fault_events.append(
+                    FaultEvent(time=now, pool=st.pool.name, kind="brownout",
+                               count=healthy))
+            else:
+                st.pending.append((at, healthy))
         st.meters.queued += queued
         return queued
 
@@ -382,7 +441,7 @@ class CapacityPlan:
                                       self.pools.index(s.pool)),
                        reverse=True)
         for st in order:                       # pass 1: cancel pending
-            if left > 0 and (st.pending or st.stuck):
+            if left > 0 and (st.pending or st.stuck or st.slow):
                 take = st.cancel(left)
                 left -= take
                 if take:
@@ -420,12 +479,16 @@ class CapacityPlan:
             st.meters.released += take
         return take
 
-    def replace_unhealthy(self, name: str, count: int,
-                          now: float) -> tuple[int, int]:
+    def replace_unhealthy(self, name: str, count: int, now: float, *,
+                          queue_replacements: bool = True) -> tuple[int, int]:
         """Tear down up to ``count`` unhealthy live units of ``name`` and
         queue replacements behind the provisioning delay (the fleet briefly
         dips, exactly as a real instance failure would).  Returns
-        ``(drained, queued)``."""
+        ``(drained, queued)``.
+
+        ``queue_replacements=False`` tears down only: an engine-backed
+        executor books each replacement itself (via :meth:`request` after a
+        measured spawn, or :meth:`queue_stuck` after a failed one)."""
         st = self._pool(name)
         k = min(int(count), st.unhealthy)
         if k <= 0:
@@ -433,15 +496,64 @@ class CapacityPlan:
         st.live -= k
         st.unhealthy -= k
         st.meters.released += k
-        queued = self.request(name, k, now)
+        queued = self.request(name, k, now) if queue_replacements else 0
         return k, queued
+
+    # -- engine-measured actuation (used by fleet step executors) --------------------
+    def calibrate_delay(self, name: str, seconds: float) -> None:
+        """Record a *measured* provisioning delay for ``name`` (real spawn
+        wall time: checkpoint load + remesh + compile + probe decode).
+        Latest measurement wins -- the first spawn pays jit compilation,
+        later ones reuse the cache, and the plan should price the current
+        reality, not the configured guess."""
+        if seconds < 0.0:
+            raise ValueError(f"measured delay must be >= 0, got {seconds}")
+        self._pool(name).delay_override = float(seconds)
+
+    def queue_stuck(self, name: str, count: int, now: float) -> int:
+        """Record ``count`` builds of ``name`` that started but will never
+        land -- a real spawn failure observed by an executor, as opposed to
+        an injected stuck_build fault.  The converger's overdue-timeout /
+        cancel / retry machinery applies identically."""
+        if count <= 0:
+            return 0
+        st = self._pool(name)
+        count = int(count)
+        st.stuck.append((now + st.delay_s, count))
+        st.meters.queued += count
+        self.fault_events.append(
+            FaultEvent(time=now, pool=st.pool.name, kind="stuck_build",
+                       count=count))
+        return count
+
+    def mark_lost(self, name: str, count: int, now: float) -> int:
+        """Remove up to ``count`` live units of ``name`` that an executor
+        observed dead (replica process killed out from under us) -- the
+        measured counterpart of an injected unit_loss fault."""
+        st = self._pool(name)
+        k = min(int(count), st.live)
+        if k <= 0:
+            return 0
+        st.live -= k
+        st.meters.lost += k
+        st.unhealthy = min(st.unhealthy, st.live)
+        self.fault_events.append(
+            FaultEvent(time=now, pool=st.pool.name, kind="unit_loss", count=k))
+        return k
+
+    def set_unhealthy(self, name: str, count: int) -> None:
+        """Sync the unhealthy gauge of ``name`` from an executor's real
+        health checks (clamped to the live count)."""
+        st = self._pool(name)
+        st.unhealthy = min(max(int(count), 0), st.live)
 
     def overdue_pending(self, name: str, now: float, timeout_s: float) -> int:
         """Builds of ``name`` whose expected landing is more than
         ``timeout_s`` overdue -- the observable symptom of a stuck build."""
         st = self._pool(name)
         return (sum(c for at, c in st.stuck if now >= at + timeout_s)
-                + sum(c for at, c in st.pending if now >= at + timeout_s))
+                + sum(c for at, c in st.pending if now >= at + timeout_s)
+                + sum(c for exp, _, c in st.slow if now >= exp + timeout_s))
 
     def _pool(self, name: str) -> _PoolState:
         st = self._state.get(name)
@@ -483,6 +595,13 @@ class CapacityPlan:
             "pool_unit_seconds": self.unit_seconds_by_pool(),
             "pool_cost_rates": {p.name: p.cost_rate for p in self.pools},
             "n_revocations": self.n_revoked,
+            # measured provisioning delays only -- a pool appears here iff an
+            # executor calibrated it from a real spawn (configured guesses
+            # stay out of the report)
+            "pool_provision_delay_s": {
+                name: st.delay_override
+                for name, st in self._state.items()
+                if st.delay_override is not None},
         }
 
 

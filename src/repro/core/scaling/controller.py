@@ -136,11 +136,17 @@ class ScalingController:
         bus: SignalBus | None = None,
         *,
         starting_units: int = 1,
+        executor_factory=None,
     ):
         self.policy = policy
         self.cfg = cfg
         self.bus = bus if bus is not None else SignalBus((cfg.signal_channel,),
                                                          bin_s=cfg.step_s)
+        # convergence-mode step executor: called as executor_factory(plan)
+        # on every reset (reset() rebuilds the plan, so the executor must be
+        # rebound to the new one).  None = the converger's default
+        # PlanExecutor, i.e. steps mutate plan counters (pre-fleet behavior).
+        self._executor_factory = executor_factory
         self.reset(starting_units)
 
     # -- lifecycle ------------------------------------------------------------------
@@ -164,8 +170,10 @@ class ScalingController:
             self.audit.append(0.0, "init",
                               pools={p.name: self.plan.live_of(p.name)
                                      for p in self.plan.pools})
+            executor = (self._executor_factory(self.plan)
+                        if self._executor_factory is not None else None)
             self._converger = Converger(self.plan, self.cfg.converge,
-                                        audit=self.audit)
+                                        audit=self.audit, executor=executor)
         if self.cfg.group is not None:
             self.cfg.group.reset()
         self.policy.reset()

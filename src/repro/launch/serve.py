@@ -171,10 +171,9 @@ def serve(args) -> int:
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg)
     params = model.init_params(jax.random.key(args.seed))
-    eng = ServingEngine(model, params,
-                        ServeConfig(max_batch=args.batch, max_len=args.max_len,
-                                    page_size=args.page_size,
-                                    decode_steps=args.decode_steps))
+    serve_cfg = ServeConfig(max_batch=args.batch, max_len=args.max_len,
+                            page_size=args.page_size,
+                            decode_steps=args.decode_steps)
 
     stream = request_stream(n_requests=args.requests, seed=args.seed,
                             mean_prompt=args.mean_prompt,
@@ -208,6 +207,43 @@ def serve(args) -> int:
                   file=sys.stderr)
             return 2
     policy = make_policy(args.policy) if args.policy else None
+
+    if args.replicas > 1:
+        # fleet mode: the unit of elasticity is a whole ENGINE, spawned from
+        # a checkpoint with a measured provisioning delay and drained with
+        # in-flight migration (see repro.serving.fleet)
+        import os
+        import tempfile
+
+        from repro.checkpoint import save_checkpoint
+        from repro.serving.fleet import ReplicaPool, FleetBackend
+        ckpt_dir = tempfile.mkdtemp(prefix="fleet-ckpt-")
+        ckpt = save_checkpoint(os.path.join(ckpt_dir, "ckpt_00000001.npz"),
+                               params, step=0)
+        pool = ReplicaPool(model, ckpt, serve_cfg)
+        backend = FleetBackend(pool, reqs, sla_s=args.sla,
+                               horizon_s=args.horizon, policy=policy,
+                               starting_replicas=1,
+                               max_replicas=args.replicas,
+                               decode_steps=args.decode_steps,
+                               audit_path=args.audit_path)
+        t0 = time.time()
+        try:
+            rep = backend.run()
+        except DrainTimeout:
+            print("[serve] fleet failed to drain", file=sys.stderr)
+            return 1
+        measured = rep.pool_provision_delay_s.get("replica", 0.0)
+        print(f"[serve] fleet completed {rep.n_done}/{len(reqs)} requests "
+              f"({time.time() - t0:.1f}s wall) under {rep.policy}")
+        print(f"[serve] latency mean {rep.mean_latency_s:.1f} "
+              f"p99 {rep.p99_latency_s:.1f} (virtual s); "
+              f"SLA({args.sla}s) violations {100 * rep.violation_rate:.2f}%; "
+              f"replicas peak {rep.max_units}/{args.replicas}; "
+              f"measured provisioning delay {measured:.2f}s")
+        return 0
+
+    eng = ServingEngine(model, params, serve_cfg)
     backend = ServeBackend(eng, reqs, sla_s=args.sla, horizon_s=args.horizon,
                            policy=policy, stall_steps=args.stall_steps,
                            decode_steps=args.decode_steps,
@@ -248,6 +284,12 @@ def main():
     ap.add_argument("--page-size", type=int, default=None,
                     help="KV page size (default: autotuned per backend, see "
                          "repro.kernels.decode_attention.autotune)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="ceiling on serving-engine replicas; > 1 switches to "
+                         "fleet mode (repro.serving.fleet): starts at one "
+                         "replica spawned from a checkpoint and lets the "
+                         "convergence plane scale the fleet elastically, with "
+                         "measured provisioning delays and drain-migration")
     ap.add_argument("--decode-steps", type=int, default=1,
                     help="tokens each slot advances per virtual second (one "
                          "K-step device loop per engine step); 1 keeps the "

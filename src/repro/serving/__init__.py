@@ -1,3 +1,5 @@
-from repro.serving.engine import Request, ServeConfig, ServingEngine
+from repro.serving.engine import (
+    MigratedRequest, Request, ServeConfig, ServingEngine,
+)
 
-__all__ = ["Request", "ServeConfig", "ServingEngine"]
+__all__ = ["MigratedRequest", "Request", "ServeConfig", "ServingEngine"]

@@ -83,6 +83,18 @@ class Request:
 
 
 @dataclass(frozen=True)
+class MigratedRequest:
+    """One in-flight request lifted off a draining replica: the request,
+    its decode progress, and its committed KV pages as host arrays (None
+    when nothing is committed yet -- the importer replays the prompt)."""
+
+    req: Request
+    pos: int                           # committed KV positions on the source
+    remaining: int                     # decode budget left (NOT max_new_tokens)
+    kv_chunks: object                  # pytree of (L, h, ps, *rest) or None
+
+
+@dataclass(frozen=True)
 class ServeConfig:
     max_batch: int = 8
     max_len: int = 1024
@@ -461,6 +473,60 @@ class ServingEngine:
         self.submit(req)
         return req
 
+    # -- migration (fleet drain path; see repro.serving.fleet) --------------------
+    def export_request(self, slot: int) -> MigratedRequest:
+        """Lift the in-flight request off ``slot`` for migration: copy its
+        committed KV pages to host arrays, free the slot, and return
+        everything :meth:`import_request` needs to resume it elsewhere
+        bit-identically.  Call only at a step boundary (host ``pos``/
+        ``remaining`` are synced then).  Chunked paged engines only -- the
+        mixed loop rebuilds history from prompt + output, so per-row state
+        transfers without a dense cache copy."""
+        if not self.chunked:
+            raise RuntimeError("migration requires the chunked paged engine")
+        req = self.active.pop(slot)
+        pos = int(self.pos[slot])
+        chunks = self.kv.export_slot(slot) if pos > 0 else None
+        m = MigratedRequest(req=req, pos=pos,
+                            remaining=int(self.remaining[slot]),
+                            kv_chunks=chunks)
+        self._reset_slot(slot)
+        return m
+
+    def can_import(self) -> bool:
+        """True if a migrated request could be admitted right now (free slot
+        under the cap; page admission is checked per request at import)."""
+        return (len(self.active) < min(self.slot_limit, self.cfg.max_batch)
+                and len(self.active) < self.cfg.max_batch)
+
+    def import_request(self, m: MigratedRequest) -> int:
+        """Re-admit a migrated request with its committed KV installed.
+
+        The decode budget resumes at the exported ``remaining`` (a plain
+        ``submit`` would restart it at ``max_new_tokens`` and over-emit);
+        the mixed loop then continues from ``pos`` exactly as the source
+        would have -- per-row state is independent of batch composition, so
+        the emitted tokens are bit-identical.  Returns the slot."""
+        if not self.chunked:
+            raise RuntimeError("migration requires the chunked paged engine")
+        if not self.can_import():
+            raise RuntimeError("no free slot under the cap for import")
+        total = len(m.req.prompt) + m.req.max_new_tokens - 1
+        if not self.kv.can_admit(total):
+            raise RuntimeError("page pool cannot admit the migrated request")
+        slot = next(s for s in range(self.cfg.max_batch)
+                    if s not in self.active)
+        if self.kv.held[slot] or self.kv.worst[slot]:
+            self._reset_slot(slot)       # reclaim a force-popped slot's pages
+        if m.pos > 0 and m.kv_chunks is not None:
+            self.kv.import_slot(slot, m.kv_chunks, total)
+        else:
+            self.kv.reserve(slot, total)
+        self.pos[slot] = m.pos
+        self.remaining[slot] = m.remaining
+        self.active[slot] = m.req
+        return slot
+
     # -- scheduling ---------------------------------------------------------------
     def _note_prefilled(self, slot: int, req: Request, install: bool,
                         tok: int, logp: float, now: float) -> int:
@@ -817,4 +883,4 @@ class ServingEngine:
         raise RuntimeError("engine failed to drain")
 
 
-__all__ = ["Request", "ServeConfig", "ServingEngine"]
+__all__ = ["MigratedRequest", "Request", "ServeConfig", "ServingEngine"]

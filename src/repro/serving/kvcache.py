@@ -360,6 +360,34 @@ class PagedKVCache:
         self.held[slot] = 0
         self.worst[slot] = 0
 
+    # -- migration (drain path; see engine.export_request) ----------------------
+    def export_slot(self, slot: int):
+        """Copy ``slot``'s held pages out of the pool as HOST arrays, in
+        logical order: a pytree of (L, h, ps, *rest) leaves with h = pages
+        held.  Positions past the slot's committed count inside the last
+        page are garbage, exactly as they are on the source after a
+        ``shrink_to`` -- the importer rewrites them before any mask lets
+        them be read.  Returns None for a slot with no pages yet."""
+        h = int(self.held[slot])
+        if h == 0:
+            return None
+        ids = np.asarray(self.block_table[slot, :h])
+        return jax.tree.map(lambda pg: np.asarray(pg[:, ids]), self.pages)
+
+    # replint: traced -- write_prefill_pages is jit-side; the eager call here
+    # is the cold migration path
+    def import_slot(self, slot: int, chunks, total_tokens: int) -> None:
+        """Install chunks from :meth:`export_slot` as ``slot``'s committed
+        KV: allocate exactly their page count, put the slot's worst-case
+        reservation (``total_tokens``) on the books, and scatter the pages
+        into the pool in logical order."""
+        h = jax.tree.leaves(chunks)[0].shape[1]
+        ids = self.alloc_prefill(slot, h * self.page_size, total_tokens, h)
+        cache = jax.tree.map(
+            lambda c: jnp.asarray(c).reshape(
+                (c.shape[0], 1, h * self.page_size) + c.shape[3:]), chunks)
+        self.pages = write_prefill_pages(self.pages, cache, ids)
+
     # -- invariants (tests) -----------------------------------------------------
     def check_invariants(self) -> None:
         owned = [int(p) for s in range(self.block_table.shape[0])

@@ -57,6 +57,29 @@ def test_corrupt_save_never_clobbers(tmp_path):
     assert meta["step"] == 1
 
 
+def test_latest_skips_unmarked_partial_checkpoint(tmp_path):
+    """A ckpt file without its terminal marker (interrupted save, torn copy)
+    must never be picked as latest; restore falls back to the newest
+    complete one."""
+    from repro.checkpoint import OK_SUFFIX
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=False)
+    t = _tree()
+    mgr.save(t, step=1)
+    good = mgr.latest()
+    assert good is not None and os.path.exists(good + OK_SUFFIX)
+    # a newer-looking but unmarked file: simulated crash after the rename
+    # but before the terminal marker
+    torn = tmp_path / "ckpt_00000099.npz"
+    torn.write_bytes(b"not an npz")
+    assert mgr.latest() == good
+    loaded, meta = mgr.restore_latest(t)
+    assert meta["step"] == 1
+    # a stray marker without its npz must not resurrect anything either
+    os.remove(torn)
+    (tmp_path / ("ckpt_00000099.npz" + OK_SUFFIX)).write_text("ok\n")
+    assert mgr.latest() == good
+
+
 def test_data_determinism_and_host_sharding():
     cfg = DataConfig(vocab=1000, seq_len=32, global_batch=8, seed=9)
     a = TokenStream(cfg).batch(17)

@@ -31,6 +31,7 @@ from repro.core.convergence import (
     PoolTarget,
     ReplaceUnhealthy,
     ScalingGroup,
+    StepExecutor,
     derive_desired,
     observed_group,
     plan_steps,
@@ -216,6 +217,12 @@ def test_fault_spec_validation_and_windowing():
         FaultSpec(stuck_p=1.5)
     with pytest.raises(ValueError, match="end_s"):
         FaultSpec(start_s=10.0, end_s=5.0)
+    with pytest.raises(ValueError, match="brownout_factor"):
+        FaultSpec(brownout_factor=0.5)
+    with pytest.raises(ValueError, match="corr_loss_p"):
+        FaultSpec(corr_loss_p=-0.1)
+    with pytest.raises(ValueError, match="corr_loss_frac"):
+        FaultSpec(corr_loss_frac=0.0)
     spec = FaultSpec(pool="od", loss_rate=0.1, start_s=10.0, end_s=20.0)
     assert spec.active("od", 10.0) and not spec.active("od", 20.0)
     assert not spec.active("spot", 15.0)
@@ -251,6 +258,80 @@ def test_plan_threads_stuck_builds_through_pending():
     assert plan.cancel_pending("od", 3) == 3
     assert plan.pending_of("od") == 0
     assert plan.meters()["od"].cancelled == 3
+
+
+def test_brownout_build_lands_late_but_lands():
+    plan = CapacityPlan(
+        (UnitPool("od", provision_delay_s=10.0, max_units=8),),
+        starting_units=1,
+        faults=FaultInjector((FaultSpec(brownout_factor=4.0, seed=1),)))
+    assert plan.request("od", 2, now=0.0) == 2
+    assert plan.fault_events[-1].kind == "brownout"
+    assert plan.pending_of("od") == 2             # observably pending
+    plan.land(10.0)                               # the PROMISED landing time
+    assert plan.live_of("od") == 1                # ...nothing arrives
+    # overdue keys off the promise, so the converger can SEE the brownout
+    # long before the real landing at 10 s * factor 4
+    assert plan.overdue_pending("od", 25.0, 10.0) == 2
+    plan.land(40.0)
+    assert plan.live_of("od") == 3 and plan.pending_of("od") == 0
+    assert plan.meters()["od"].landed == 2
+
+
+def test_cancel_order_stuck_then_brownout_then_healthy():
+    inj = FaultInjector((
+        FaultSpec(stuck_p=1.0, start_s=0.0, end_s=1.0, seed=2),
+        FaultSpec(brownout_factor=4.0, start_s=10.0, end_s=11.0, seed=2),
+    ))
+    plan = CapacityPlan(
+        (UnitPool("od", provision_delay_s=10.0, max_units=8),),
+        starting_units=1, faults=inj)
+    plan.request("od", 1, now=0.0)      # sticks forever
+    plan.request("od", 1, now=10.0)     # browned out: would land at 50 s
+    plan.request("od", 1, now=20.0)     # healthy: lands at 30 s
+    assert plan.pending_of("od") == 3
+    assert [e.kind for e in plan.fault_events] == ["stuck_build", "brownout"]
+    # worthless capacity goes first: the stuck build, then the build that
+    # lands LATEST (browned out), and only then healthy pending
+    assert plan.cancel_pending("od", 2) == 2
+    plan.land(30.0)
+    assert plan.live_of("od") == 2      # the healthy build survived
+    plan.land(60.0)
+    assert plan.live_of("od") == 2 and plan.pending_of("od") == 0
+    m = plan.meters()["od"]
+    assert m.cancelled == 2 and m.landed == 1
+
+
+def test_corr_loss_shares_one_draw_across_pools_and_is_deterministic():
+    spec = FaultSpec(corr_loss_p=0.25, corr_loss_frac=0.5, seed=9)
+    inj = FaultInjector((spec,))
+    # the event fires once per (spec, step): every pool the spec covers is
+    # hit in the SAME step -- that shared draw is the correlation
+    a = [inj.corr_loss("a", 4, float(t), 1.0) for t in range(200)]
+    b = [inj.corr_loss("b", 4, float(t), 1.0) for t in range(200)]
+    assert a == b and set(a) == {0, 2}            # ceil(0.5 * 4) on events
+    assert 0 < sum(1 for x in a if x) < 200
+    inj.reset()
+    assert [inj.corr_loss("a", 4, float(t), 1.0) for t in range(200)] == a
+    fresh = FaultInjector((spec,))
+    assert [fresh.corr_loss("a", 4, float(t), 1.0) for t in range(200)] == a
+
+    # through the plan: one AZ-scale event takes half of BOTH pools at once
+    plan = CapacityPlan(
+        (UnitPool("a", provision_delay_s=1.0, max_units=8),
+         UnitPool("b", provision_delay_s=1.0, max_units=8)),
+        starting_units=4,
+        faults=FaultInjector((FaultSpec(corr_loss_p=1.0, corr_loss_frac=0.5,
+                                        start_s=5.0, end_s=6.0, seed=9),)))
+    plan.request("b", 4, now=0.0)
+    plan.land(1.0)
+    assert plan.live_of("a") == 4 and plan.live_of("b") == 4
+    plan.land(5.0)                                # window: the event fires
+    assert plan.live_of("a") == 2 and plan.live_of("b") == 2
+    hits = [e for e in plan.fault_events if e.kind == "corr_loss"]
+    assert {(e.pool, e.time, e.count) for e in hits} == \
+        {("a", 5.0, 2), ("b", 5.0, 2)}
+    assert plan.meters()["a"].lost == 2 and plan.meters()["b"].lost == 2
 
 
 # ---------------------------------------------------------------------------------
@@ -356,6 +437,57 @@ def test_converger_replaces_flapping_units_with_damping():
     assert conv.plan.stats()["on-demand"].unhealthy == 0
     assert conv.units == 4
     assert replay(conv.audit.records) == _final_state(conv.plan)
+
+
+class _RecordingExecutor:
+    """StepExecutor that records every actuation before delegating to the
+    plan -- the seam repro.serving.fleet.FleetExecutor plugs into."""
+
+    def __init__(self, plan):
+        self.plan = plan
+        self.calls = []
+
+    def launch(self, pool, count, now):
+        self.calls.append(("launch", pool, count, now))
+        return self.plan.request(pool, count, now)
+
+    def cancel_pending(self, pool, count, now):
+        self.calls.append(("cancel_pending", pool, count, now))
+        return self.plan.cancel_pending(pool, count)
+
+    def drain(self, pool, count, now):
+        self.calls.append(("drain", pool, count, now))
+        return self.plan.drain(pool, count)
+
+    def replace_unhealthy(self, pool, count, now):
+        self.calls.append(("replace_unhealthy", pool, count, now))
+        return self.plan.replace_unhealthy(pool, count, now)
+
+
+def test_controller_routes_convergence_steps_through_custom_executor():
+    """executor_factory is the engine-actuation seam: every convergence step
+    flows through the bound executor, and reset() rebinds it to the rebuilt
+    plan (a stale binding would actuate a dead plan object)."""
+    made = []
+
+    def factory(plan):
+        made.append(_RecordingExecutor(plan))
+        return made[-1]
+
+    cfg = ControllerConfig(adapt_period_s=5.0, provision_delay_s=2.0,
+                           min_units=1, max_units=8, step_s=1.0,
+                           app_window_s=5.0, convergence=True)
+    ctrl = ScalingController(_Script([2]), cfg, SignalBus(("app",), bin_s=1.0),
+                             starting_units=1, executor_factory=factory)
+    assert isinstance(made[-1], StepExecutor)     # satisfies the protocol
+    assert made[-1].plan is ctrl.plan
+    _drive(ctrl, 12)
+    launches = [c for c in made[-1].calls if c[0] == "launch"]
+    assert launches and sum(c[2] for c in launches) == 2
+    assert ctrl.units == 3                        # the launches really landed
+    ctrl.reset()
+    assert len(made) == 2 and made[-1].plan is ctrl.plan
+    assert made[-1].plan is not made[-2].plan
 
 
 # ---------------------------------------------------------------------------------
