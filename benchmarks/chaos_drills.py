@@ -1,0 +1,413 @@
+"""Chaos-drill soak gate: scripted incidents with invariant-checked recovery.
+
+Two layers, matching the incident-hardening design (DESIGN.md):
+
+* **Elastic incidents** -- five deterministic fault scripts
+  (:class:`~repro.core.convergence.ScriptedFaults`: timed unit kills,
+  correlated AZ-scale loss, loss landing under a stuck-build window, and
+  webhook capacity floors raised MID-INCIDENT while the converger is inside
+  a retry/backoff cycle) each run twice on the elastic backend: imperative
+  baseline vs ``convergence=True``.  The gate is strict on every script:
+  the converger's SLA violation rate must be LOWER, and the convergence
+  audit log must pass the full :func:`~repro.core.chaos.check_audit`
+  battery (CRC-sealed tail, capacity replay equals the final fleet state,
+  pure-planner replay reproduces every logged decision and generation).
+* **Fleet drills** -- the same discipline against REAL serving engines:
+  a :class:`~repro.core.chaos.ChaosDrill` kills 2 of 3 live replicas in one
+  correlated event mid-burst (exactly-once completion, bit-identical
+  outputs vs the no-fault reference, KV page conservation, audit replay),
+  plus a webhook floor that lands while a failed respawn sits in backoff --
+  the floor must supersede the stale retry ("superseded" in the audit),
+  not wait it out.
+
+Determinism is itself a gate: re-running the same seeded script produces a
+byte-identical audit log on both backends.  All invariants hard-fail the
+bench.  Emitted as ``benchmarks/artifacts/chaos_drills.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from dataclasses import dataclass
+
+import numpy as np
+
+from benchmarks.common import Rows, banner
+from benchmarks.convergence_faults import (
+    BROWNOUT_POOL, CONVERGE, POOL, _RestartFloor,
+)
+from repro.core.autoscaler import Policy, ThresholdPolicy
+from repro.core.autoscaler.base import CompositePolicy, Decision
+from repro.core.chaos import ChaosAction, ChaosDrill, ChaosScript, check_audit
+from repro.core.convergence import (
+    AuditLog,
+    ConvergerConfig,
+    ScriptedFault,
+    ScriptedFaults,
+)
+from repro.core.convergence.groups import ScalingGroup
+from repro.core.elastic import ClusterConfig, ElasticCluster
+
+ARTIFACT = os.path.join(os.path.dirname(__file__), "artifacts",
+                        "chaos_drills.json")
+
+FLEET_SLA_S = 6.0             # tight enough that a 1-replica limp violates
+
+
+def _surge_group(max_units: int, floor: int) -> ScalingGroup:
+    """One webhook ('surge') raising the replica floor for 400 s."""
+    return ScalingGroup.from_config({
+        "name": "chaos-drills",
+        "pools": [{"name": "replica", "provision_delay_s": 45.0,
+                   "min_units": 1, "max_units": max_units}],
+        "webhooks": [{"name": "surge", "hold_s": 400.0,
+                      "targets": {"replica": floor}}],
+    })
+
+
+@dataclass(frozen=True)
+class Incident:
+    """One scripted elastic incident: timed faults + optional webhook fires."""
+
+    name: str
+    events: tuple
+    pools: tuple = POOL
+    group: ScalingGroup | None = None
+    fires: tuple = ()            # (at_s, webhook name), fired mid-run
+    floor: int = 0               # converger must reach this peak if set
+    note: str = ""
+
+
+#: the two workload bursts peak at 400 s and 800 s; every script is timed
+#: against them (kills mid-ramp, windows covering the burst, floors raised
+#: while the converger is mid-retry)
+INCIDENTS = (
+    Incident(
+        "burst-kill",
+        (ScriptedFault(405.0, "lose", count=2),
+         ScriptedFault(430.0, "lose", count=1),
+         ScriptedFault(810.0, "lose", count=2),
+         ScriptedFault(950.0, "flap", count=1)),
+        note="timed kills inside both bursts + a late health flap"),
+    Incident(
+        "corr-az-loss",
+        (ScriptedFault(410.0, "corr_lose", frac=0.5),
+         ScriptedFault(440.0, "corr_lose", frac=0.5),
+         ScriptedFault(470.0, "corr_lose", frac=0.5),
+         ScriptedFault(820.0, "corr_lose", frac=0.5),
+         ScriptedFault(850.0, "corr_lose", frac=0.5)),
+        note="repeated AZ-scale events each take half the live fleet -- "
+             "losses compound faster than one +1 vote per adapt tick"),
+    Incident(
+        "loss-under-stuck",
+        (ScriptedFault(370.0, "lose", count=2),
+         ScriptedFault(390.0, "stick", until_s=600.0)),
+        group=_surge_group(12, 5), fires=((640.0, "surge"),), floor=5,
+        note="kills land just before every rebuild starts sticking; after "
+             "the window an operator floor pins recovery capacity through "
+             "the trough so the next burst is not served from a drained "
+             "fleet"),
+    Incident(
+        "stuck-floor-race",
+        (ScriptedFault(350.0, "stick", until_s=650.0),),
+        group=_surge_group(12, 8), fires=((540.0, "surge"),), floor=8,
+        note="operator floor raised mid-backoff during a stuck window"),
+    Incident(
+        "brownout-floor-race",
+        (ScriptedFault(350.0, "brownout", until_s=520.0, factor=8.0),),
+        pools=BROWNOUT_POOL, group=_surge_group(4, 4),
+        fires=((430.0, "surge"),), floor=4,
+        note="floor lands mid-retry while browned-out builds clog a tight "
+             "ceiling"),
+)
+
+
+class _HoldPolicy(Policy):
+    """Freeze capacity at the starting fleet: the fleet drills isolate the
+    converger's healing (kill -> relaunch, floor -> supersede) from
+    policy-driven scaling, so the imperative baseline's only affordance is
+    whatever capacity survived the script."""
+
+    name = "hold"
+
+    def decide(self, obs) -> Decision:
+        del obs
+        return Decision()
+
+    def describe(self) -> str:
+        return "hold"
+
+
+# ---------------------------------------------------------------------------------
+# elastic incidents: imperative vs converger, audit battery, strict wins
+# ---------------------------------------------------------------------------------
+
+def _run_incident(n: int, inc: Incident, *, convergence: bool,
+                  audit_path: str | None = None):
+    from benchmarks.elastic_serving import _workload
+    faults = ScriptedFaults(inc.events)
+    policy: Policy = _RestartFloor(ThresholdPolicy(0.7))
+    hook = None
+    if convergence:
+        if inc.fires:
+            def hook(cluster, t):
+                for at, name in inc.fires:
+                    if at <= t < at + cluster.cfg.step_s:
+                        cluster.controller.fire_webhook(name, t)
+        cfg = ClusterConfig(pools=inc.pools, faults=faults, convergence=True,
+                            converge=CONVERGE, group=inc.group,
+                            audit_path=audit_path)
+    else:
+        if inc.fires:
+            # legacy semantics: the group's floors only reach an imperative
+            # controller as a delta-voting policy, so the baseline gets the
+            # SAME operator intent through its own mechanism
+            wh = inc.group.as_policy()
+            policy = CompositePolicy([policy, wh])
+
+            def hook(cluster, t):
+                for at, name in inc.fires:
+                    if at <= t < at + cluster.cfg.step_s:
+                        wh.fire(name, t)
+        cfg = ClusterConfig(pools=inc.pools, faults=faults, convergence=False)
+    cluster = ElasticCluster(cfg, policy, _workload(n=n), on_step=hook)
+    rep = cluster.run()
+    return rep, cluster.controller
+
+
+def _final_state(ctrl) -> dict:
+    return {p: {"live": s.units, "pending": s.pending}
+            for p, s in ctrl.plan.stats().items()}
+
+
+def _elastic_incidents(n: int, tmp: str, rows: Rows) -> dict:
+    out = {}
+    for inc in INCIDENTS:
+        imp, _ = _run_incident(n, inc, convergence=False)
+        apath = os.path.join(tmp, f"{inc.name}.jsonl")
+        conv, ctrl = _run_incident(n, inc, convergence=True, audit_path=apath)
+        assert ctrl.plan.fault_events, f"{inc.name}: no scripted fault fired"
+
+        # invariant battery on the convergence run's sealed audit log
+        bad = check_audit(apath, _final_state(ctrl))
+        assert not bad, (f"{inc.name}: audit invariants violated: "
+                         + "; ".join(str(v) for v in bad))
+
+        # the converger must strictly beat the imperative baseline
+        assert conv.violation_rate < imp.violation_rate, (
+            f"{inc.name}: converger {conv.violation_rate:.4f} !< "
+            f"imperative {imp.violation_rate:.4f}")
+
+        if inc.fires:
+            kinds = {r["kind"] for r in ctrl.audit.records}
+            assert "webhook" in kinds, \
+                f"{inc.name}: webhook fire missing from the audit log"
+            assert int(conv.units_t.max()) >= inc.floor, (
+                f"{inc.name}: converger peaked at {int(conv.units_t.max())} "
+                f"< webhook floor {inc.floor}")
+
+        for mode, rep in (("imperative", imp), ("converger", conv)):
+            rows.add(f"{inc.name}.{mode}.viol_pct", 100.0 * rep.violation_rate)
+        rows.add(f"{inc.name}.viol_pct_saved",
+                 100.0 * (imp.violation_rate - conv.violation_rate), inc.note)
+        out[inc.name] = {
+            mode: {"violation_rate": rep.violation_rate,
+                   "unit_seconds": rep.unit_seconds,
+                   "p99_latency_s": rep.p99_latency_s,
+                   "max_units": rep.max_units}
+            for mode, rep in (("imperative", imp), ("converger", conv))}
+        out[inc.name]["faults_fired"] = len(ctrl.plan.fault_events)
+    return out
+
+
+def _elastic_byte_identity(n: int, tmp: str, rows: Rows) -> None:
+    """Same script, same seed, fresh run: the audit log must be IDENTICAL."""
+    inc = INCIDENTS[1]                       # corr-az-loss
+    paths = [os.path.join(tmp, f"rerun{i}.jsonl") for i in (0, 1)]
+    for p in paths:
+        _run_incident(n, inc, convergence=True, audit_path=p)
+    blobs = [open(p, "rb").read() for p in paths]
+    assert blobs[0] and blobs[0] == blobs[1], (
+        "elastic re-run audit log diverged -- scripted incidents are no "
+        "longer deterministic")
+    rows.add("elastic.audit_byte_identical", 1.0,
+             f"{len(blobs[0])} bytes, {inc.name}")
+
+
+# ---------------------------------------------------------------------------------
+# fleet drills: real engines, full invariant battery
+# ---------------------------------------------------------------------------------
+
+def _burst_workload(cfg, rng, n: int):
+    """Front-loaded arrivals: two thirds of the stream lands in one burst at
+    t=2 s (the correlated kill hits mid-burst), the tail trickles 1/s."""
+    from repro.serving import Request
+    cut = (2 * n) // 3
+    reqs = []
+    for i in range(n):
+        plen = int(rng.integers(6, 48))
+        reqs.append(Request(
+            rid=i, prompt=rng.integers(0, cfg.vocab, plen).astype(np.int32),
+            max_new_tokens=int(rng.integers(4, 12)),
+            arrival_s=2.0 if i < cut else float(3 + i - cut)))
+    return reqs
+
+
+def _drill_corr_kill(ckpt_dir: str, n: int, tmp: str, rows: Rows) -> dict:
+    """Correlated loss of 2-of-3 REAL replicas under burst load: full
+    invariant battery, byte-identical audit re-run, and a strict violation
+    win over the imperative baseline (same kills, no healing)."""
+    from benchmarks.fleet_serving import _make_pool
+    from repro.serving.fleet import FleetBackend
+
+    def make_backend(on_step=None, audit_path=None, convergence=True):
+        cfg, pool = _make_pool(0, ckpt_dir)
+        reqs = _burst_workload(cfg, np.random.default_rng(7), n)
+        return FleetBackend(
+            pool, reqs, sla_s=FLEET_SLA_S, horizon_s=float(n + 30),
+            policy=_HoldPolicy(), starting_replicas=3, max_replicas=3,
+            provision_delay_s=2.0, adapt_period_s=2.0, app_window_s=4.0,
+            decode_steps=2, converge=ConvergerConfig(build_timeout_s=30.0),
+            convergence=convergence, calibrate=False, on_step=on_step,
+            audit_path=audit_path)
+
+    script = ChaosScript([ChaosAction(3.0, "corr_kill", frac=0.5)], seed=9)
+    apath = os.path.join(tmp, "fleet_corr.jsonl")
+    drill = ChaosDrill("fleet-corr-kill", make_backend, script,
+                       audit_path=apath)
+    report = drill.run()
+    assert report.ok, report.summary()
+    assert len(report.fired) == 1 and len(report.fired[0]["victims"]) == 2, \
+        f"correlated kill did not take 2 replicas: {report.fired}"
+    assert report.n_completed == n == report.n_reference, report.summary()
+
+    # determinism gate: a fresh same-seed faulted run writes the same bytes
+    script.reset()
+    p2 = os.path.join(tmp, "fleet_corr_rerun.jsonl")
+    conv_rep = make_backend(on_step=script.on_step, audit_path=p2).run()
+    blobs = [open(p, "rb").read() for p in (apath, p2)]
+    assert blobs[0] and blobs[0] == blobs[1], (
+        "fleet re-run audit log diverged -- the drill is no longer "
+        "deterministic (did calibrate=False stop pinning the landing clock?)")
+    rows.add("fleet.audit_byte_identical", 1.0, f"{len(blobs[0])} bytes")
+
+    # imperative baseline: same script, no desired state -- the dead
+    # replicas stay dead and the burst drains on whatever survived
+    script.reset()
+    imp_rep = make_backend(on_step=script.on_step, convergence=False).run()
+    assert conv_rep.violation_rate < imp_rep.violation_rate, (
+        f"fleet-corr-kill: converger {conv_rep.violation_rate:.4f} !< "
+        f"imperative {imp_rep.violation_rate:.4f}")
+    rows.add("fleet-corr-kill.converger.viol_pct",
+             100.0 * conv_rep.violation_rate)
+    rows.add("fleet-corr-kill.imperative.viol_pct",
+             100.0 * imp_rep.violation_rate)
+    return {"violations": [str(v) for v in report.violations],
+            "fired": report.fired, "n_completed": report.n_completed,
+            "converger_violation_rate": conv_rep.violation_rate,
+            "imperative_violation_rate": imp_rep.violation_rate,
+            "audit_bytes": len(blobs[0])}
+
+
+def _drill_floor_mid_retry(ckpt_dir: str, n: int, tmp: str,
+                           rows: Rows) -> dict:
+    """Webhook floor landing mid-retry on the real fleet: a kill's respawn
+    fails (measured stuck build), the converger cancels and parks the pool
+    behind a LONG backoff -- then the operator floor arrives and must
+    supersede the stale retry state, relaunching immediately."""
+    from benchmarks.fleet_serving import _make_pool
+    from repro.serving.fleet import FleetBackend
+
+    group = ScalingGroup.from_config({
+        "name": "fleet-chaos",
+        "pools": [{"name": "replica", "provision_delay_s": 2.0,
+                   "min_units": 1, "max_units": 3}],
+        "webhooks": [{"name": "surge", "hold_s": 30.0,
+                      "targets": {"replica": 3}}],
+    })
+
+    def make_backend(on_step=None, audit_path=None):
+        cfg, pool = _make_pool(0, ckpt_dir)
+        spawns = [0]
+
+        def third_spawn_fails():
+            # spawns 1-2 bring up the starting fleet; the kill's respawn
+            # (spawn 3) fails, so the heal sits in timeout -> cancel ->
+            # backoff when the webhook floor lands
+            spawns[0] += 1
+            return spawns[0] == 3
+
+        pool.spawn_fault = third_spawn_fails
+        reqs = _burst_workload(cfg, np.random.default_rng(11), n)
+        return FleetBackend(
+            pool, reqs, sla_s=FLEET_SLA_S, horizon_s=float(n + 60),
+            policy=_HoldPolicy(), starting_replicas=2, max_replicas=3,
+            provision_delay_s=2.0, adapt_period_s=2.0, app_window_s=4.0,
+            decode_steps=2,
+            converge=ConvergerConfig(build_timeout_s=4.0, backoff_base_s=50.0,
+                                     backoff_max_s=50.0, max_retries=10),
+            group=group, calibrate=False, on_step=on_step,
+            audit_path=audit_path)
+
+    script = ChaosScript([
+        ChaosAction(3.0, "kill", count=1),
+        ChaosAction(12.0, "webhook", name="surge"),   # backoff holds to t=60
+    ], seed=13)
+    apath = os.path.join(tmp, "fleet_floor.jsonl")
+    drill = ChaosDrill("fleet-floor-mid-retry", make_backend, script,
+                       audit_path=apath)
+    report = drill.run()
+    assert report.ok, report.summary()
+    assert report.n_completed == n == report.n_reference, report.summary()
+    kinds = {r["kind"] for r in AuditLog.load(apath, verify=True)}
+    assert "webhook" in kinds, "webhook fire never reached the audit log"
+    assert "superseded" in kinds, (
+        "floor raise did not supersede the in-flight retry backoff -- the "
+        "fleet would have waited out a 50 s gate against operator intent")
+    rows.add("fleet-floor-mid-retry.ok", 1.0,
+             f"{len(report.fired)} actions, webhook superseded stale retry")
+    return {"violations": [str(v) for v in report.violations],
+            "fired": report.fired, "n_completed": report.n_completed,
+            "audit_kinds": sorted(kinds)}
+
+
+def run(quick: bool = False) -> Rows:
+    import time
+    banner("Chaos drills: scripted incidents, invariant-checked recovery")
+    rows = Rows("chaos_drills")
+    n_elastic = 2_000 if quick else 8_000
+    n_fleet = 12 if quick else 24
+    t0 = time.perf_counter()
+
+    with tempfile.TemporaryDirectory() as tmp:
+        incidents = _elastic_incidents(n_elastic, tmp, rows)
+        _elastic_byte_identity(n_elastic, tmp, rows)
+        with tempfile.TemporaryDirectory() as ckpt_dir:
+            corr = _drill_corr_kill(ckpt_dir, n_fleet, tmp, rows)
+            floor = _drill_floor_mid_retry(ckpt_dir, n_fleet, tmp, rows)
+    wall = time.perf_counter() - t0
+    rows.add("wall_s", wall)
+
+    os.makedirs(os.path.dirname(ARTIFACT), exist_ok=True)
+    payload = {
+        "description": "chaos drills: 5 scripted elastic incidents "
+                       "(imperative vs converger, strict violation wins, "
+                       "full audit battery) + 2 real-fleet drills "
+                       "(correlated kill under burst load, webhook floor "
+                       "superseding a mid-flight retry) with byte-identical "
+                       "same-seed audit re-runs on both backends",
+        "n_requests": {"elastic": n_elastic, "fleet": n_fleet},
+        "incidents": incidents,
+        "fleet_drills": {"fleet-corr-kill": corr,
+                         "fleet-floor-mid-retry": floor},
+        "wall_s": wall,
+    }
+    with open(ARTIFACT, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"[artifact] {ARTIFACT}")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=bool(int(os.environ.get("BENCH_QUICK", "0"))))

@@ -22,6 +22,7 @@ MODULES = [
     "fleet_serving",
     "policy_table",
     "convergence_faults",
+    "chaos_drills",
     "kernels_bench",
 ]
 

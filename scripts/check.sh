@@ -49,7 +49,12 @@ if [[ "$FAST" == "1" ]]; then
   echo "==        TTFT, single mixed trace; writes BENCH_serving.json) =="
   timeout 300 env BENCH_QUICK=1 python -m benchmarks.serving_engine
   echo
-  echo "check.sh: FAST OK (lint + pytest + quick serving bench)"
+  echo "== smoke: chaos drills quick (5 scripted incidents imperative-vs-"
+  echo "==        converger + 2 real-fleet drills, invariants hard-fail;"
+  echo "==        writes chaos_drills.json) =="
+  timeout 900 env BENCH_QUICK=1 python -m benchmarks.chaos_drills
+  echo
+  echo "check.sh: FAST OK (lint + pytest + quick serving/chaos benches)"
   exit 0
 fi
 
@@ -67,6 +72,12 @@ echo "== smoke: replica fleet (2-replica 1.5x aggregate tokens/s floor, bit-"
 echo "==        identical drain migration, spawn-measured provisioning delay;"
 echo "==        writes BENCH_fleet.json) =="
 timeout 420 env BENCH_QUICK=1 python -m benchmarks.fleet_serving
+
+echo
+echo "== smoke: chaos drills (5 scripted incidents imperative-vs-converger +"
+echo "==        2 real-fleet drills, invariant battery + byte-identical audit"
+echo "==        re-runs hard-fail; writes chaos_drills.json) =="
+timeout 900 env BENCH_QUICK=1 python -m benchmarks.chaos_drills
 
 echo
 echo "check.sh: ALL OK"

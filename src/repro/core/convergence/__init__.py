@@ -17,20 +17,22 @@ With no faults injected, a converged fleet plans zero steps and the whole
 plane is bit-for-bit equivalent to the imperative path (pinned by parity
 tests against the simulator goldens).
 """
-from .audit import AuditLog, replay
+from .audit import AuditIntegrityError, AuditLog, replay, verify_plan_replay
 from .converger import (
     Converger, ConvergerConfig, PlanExecutor, StepExecutor, StepOutcome,
 )
 from .desired import DesiredGroup, PoolTarget, derive_desired, observed_group
-from .faults import FaultInjector, FaultSpec
+from .faults import FaultInjector, FaultSpec, ScriptedFault, ScriptedFaults
 from .groups import (
     ScalingGroup, ScheduledChange, WebhookTrigger, validate_group_config,
 )
 from .planner import (
     CancelPending, DrainUnit, LaunchUnit, ReplaceUnhealthy, Step, plan_steps,
+    step_record,
 )
 
 __all__ = [
+    "AuditIntegrityError",
     "AuditLog",
     "CancelPending",
     "Converger",
@@ -46,6 +48,8 @@ __all__ = [
     "StepExecutor",
     "ScalingGroup",
     "ScheduledChange",
+    "ScriptedFault",
+    "ScriptedFaults",
     "Step",
     "StepOutcome",
     "WebhookTrigger",
@@ -53,5 +57,7 @@ __all__ = [
     "observed_group",
     "plan_steps",
     "replay",
+    "step_record",
     "validate_group_config",
+    "verify_plan_replay",
 ]

@@ -23,8 +23,8 @@ handling -- an under-applied step is just diff the next call re-plans.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Protocol, runtime_checkable
+from dataclasses import dataclass, replace as _dc_replace
+from typing import Iterable, Protocol, runtime_checkable
 
 from repro.core.scaling.capacity import CapacityPlan
 
@@ -32,6 +32,7 @@ from .audit import AuditLog
 from .desired import DesiredGroup
 from .planner import (
     CancelPending, DrainUnit, LaunchUnit, ReplaceUnhealthy, Step, plan_steps,
+    step_record,
 )
 
 
@@ -125,28 +126,64 @@ class Converger:
         self.audit = audit
         self.executor: StepExecutor = executor or PlanExecutor(plan)
         self.desired: DesiredGroup | None = None
+        self.generation = 0                     # desired-state epoch counter
         self._attempts: dict[str, int] = {}     # failed launch attempts
         self._gate: dict[str, float] = {}       # no launches before this time
+        self._gate_gen: dict[str, int] = {}     # epoch each gate was armed in
+        self._pool_gen: dict[str, int] = {}     # epoch of last intent change
         self._replace_gate: dict[str, float] = {}
         self._last_meters = plan.meters()
 
     # -- desired state ----------------------------------------------------------
     def set_desired(self, desired: DesiredGroup, now: float,
-                    reason: str = "") -> None:
-        if self.desired is not None:
+                    reason: str = "", refresh: Iterable[str] = ()) -> None:
+        """Install a new desired state.
+
+        A pool whose target changed -- or that is named in ``refresh``
+        (webhook floors renew intent even when the numeric target is
+        unchanged, e.g. an operator re-asserting a floor on a parked pool)
+        -- gets its retry budget and backoff gate DISCARDED, not resumed:
+        the backoff belonged to the superseded intent, and waiting it out
+        would let a stale retry outrank the operator.  Any intent change
+        bumps the desired-state ``generation``, which is stamped onto the
+        planned steps and every audit record so the log can prove no step
+        contradicted the latest desired state.
+        """
+        refresh = set(refresh)
+        superseding = set()
+        if self.desired is None:
+            superseding = set(desired.targets) | refresh
+        else:
             for name in desired.targets:
-                if desired.target_of(name) != self.desired.target_of(name):
-                    # new intent un-parks the pool and restarts its budget
-                    self._attempts.pop(name, None)
-                    self._gate.pop(name, None)
-        changed = (self.desired is None
-                   or any(desired.target_of(n) != self.desired.target_of(n)
-                          for n in desired.targets))
+                if (desired.target_of(name) != self.desired.target_of(name)
+                        or name in refresh):
+                    superseding.add(name)
+        if superseding:
+            self.generation += 1
+        desired = _dc_replace(desired, generation=self.generation)
+        for name in superseding:
+            self._pool_gen[name] = self.generation
+            # new intent un-parks the pool and restarts its budget
+            attempts = self._attempts.pop(name, None)
+            gate = self._gate.pop(name, None)
+            self._gate_gen.pop(name, None)
+            stale = ((gate is not None and gate > now)
+                     or (attempts is not None
+                         and attempts > self.cfg.max_retries))
+            if stale and self.audit is not None:
+                # a live backoff / parked pool was superseded mid-retry
+                self.audit.append(now, "superseded", pool=name,
+                                  gen=self.generation,
+                                  gate=gate if gate is not None else 0.0,
+                                  attempts=attempts or 0)
         self.desired = desired
-        if self.audit is not None and changed:
+        if self.audit is not None and superseding:
             self.audit.append(now, "desired", reason=reason,
+                              gen=self.generation,
                               targets={n: t.target
-                                       for n, t in desired.targets.items()})
+                                       for n, t in desired.targets.items()},
+                              bounds={n: [t.min_units, t.max_units]
+                                      for n, t in desired.targets.items()})
 
     # -- the loop ---------------------------------------------------------------
     def converge(self, now: float) -> list[StepOutcome]:
@@ -161,6 +198,20 @@ class Converger:
             if last is not None and cur is not None and cur.landed > last.landed:
                 self._attempts.pop(name, None)
                 self._gate.pop(name, None)
+                self._gate_gen.pop(name, None)
+        # defense in depth: a gate armed under an older epoch than the pool's
+        # latest intent change is stale and must not withhold launches --
+        # set_desired discards these eagerly, so firing here means desired
+        # state was mutated behind its back; still audited, never honored
+        for name in list(self._gate):
+            if self._gate_gen.get(name, 0) < self._pool_gen.get(name, 0):
+                gate = self._gate.pop(name)
+                self._gate_gen.pop(name, None)
+                self._attempts.pop(name, None)
+                if self.audit is not None:
+                    self.audit.append(now, "superseded", pool=name,
+                                      gen=self._pool_gen.get(name, 0),
+                                      gate=gate, attempts=0)
         stats = self.plan.stats()
         overdue: dict[str, int] = {}
         for name in stats:
@@ -181,9 +232,18 @@ class Converger:
                            launch_blocked=blocked,
                            replace_blocked=replace_blocked)
         if steps and self.audit is not None:
-            self.audit.append(now, "plan", steps=[
-                {"step": type(s).__name__, "pool": s.pool, "count": s.count}
-                for s in steps])
+            # the planner's full inputs ride along so a replay can re-run the
+            # pure planner and reproduce these exact steps (audit.verify_plan_replay)
+            self.audit.append(now, "plan", gen=self.desired.generation,
+                steps=[step_record(s) for s in steps],
+                inputs={
+                    "stats": {n: {"units": ps.units, "pending": ps.pending,
+                                  "unhealthy": ps.unhealthy,
+                                  "min_units": ps.min_units}
+                              for n, ps in stats.items()},
+                    "overdue": dict(overdue),
+                    "launch_blocked": sorted(blocked),
+                    "replace_blocked": sorted(replace_blocked)})
         return [self._execute(s, now) for s in steps]
 
     # -- internals --------------------------------------------------------------
@@ -204,7 +264,7 @@ class Converger:
         out = StepOutcome(time=now, step=step, applied=applied, queued=queued)
         if self.audit is not None:
             rec = {"step": type(step).__name__, "pool": step.pool,
-                   "asked": step.count, "applied": applied}
+                   "asked": step.count, "applied": applied, "gen": step.gen}
             if isinstance(step, CancelPending):
                 rec["reason"] = step.reason
             if isinstance(step, ReplaceUnhealthy):
@@ -221,6 +281,7 @@ class Converger:
             return
         delay = self.cfg.backoff_s(attempts)
         self._gate[name] = now + delay
+        self._gate_gen[name] = self._pool_gen.get(name, 0)
         if self.audit is not None:
             self.audit.append(now, "backoff", pool=name, attempts=attempts,
                               until=now + delay)

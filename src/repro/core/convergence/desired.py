@@ -37,9 +37,17 @@ class PoolTarget:
 
 @dataclass(frozen=True)
 class DesiredGroup:
-    """Per-pool targets the converger reconciles the fleet toward."""
+    """Per-pool targets the converger reconciles the fleet toward.
+
+    ``generation`` is the desired-state epoch: the converger bumps it on
+    every intent change (policy tick, webhook floor, schedule edge) and
+    stamps it onto the steps it plans, so retry/backoff state belonging to
+    a superseded intent can be discarded instead of resumed, and the audit
+    log can prove no step ever contradicted the latest desired state.
+    """
 
     targets: Mapping[str, PoolTarget]
+    generation: int = 0
 
     @property
     def total(self) -> int:
@@ -54,7 +62,7 @@ class DesiredGroup:
         new = dict(self.targets)
         new[name] = PoolTarget(target=int(target), min_units=cur.min_units,
                                max_units=cur.max_units)
-        return DesiredGroup(new)
+        return DesiredGroup(new, generation=self.generation)
 
 
 def observed_group(stats: Mapping[str, PoolStats]) -> DesiredGroup:

@@ -164,4 +164,110 @@ class FaultInjector:
         return min(lost, live)
 
 
-__all__ = ["FaultInjector", "FaultSpec"]
+_SCRIPT_KINDS = ("lose", "corr_lose", "flap", "heal", "stick", "brownout")
+
+
+@dataclass(frozen=True)
+class ScriptedFault:
+    """One deterministic fault occurrence on a chaos-drill timeline.
+
+    Point events (``lose`` / ``corr_lose`` / ``flap`` / ``heal``) fire in the
+    step containing ``at_s``; window events (``stick`` / ``brownout``) are
+    active over ``[at_s, until_s)``.  ``corr_lose`` takes ``frac`` of every
+    matching pool's live units in the SAME step -- the correlation is the
+    shared timeline, no draw needed.  ``pool=None`` hits every pool.
+    """
+
+    at_s: float
+    kind: str
+    pool: str | None = None
+    count: int = 1               # units for lose / flap / heal
+    frac: float = 1.0            # fraction for corr_lose
+    until_s: float = math.inf    # window end for stick / brownout
+    factor: float = 2.0          # delay inflation for brownout
+
+    def __post_init__(self):
+        if self.kind not in _SCRIPT_KINDS:
+            raise ValueError(f"kind must be one of {_SCRIPT_KINDS}, "
+                             f"got {self.kind!r}")
+        if self.at_s < 0.0:
+            raise ValueError(f"at_s must be >= 0, got {self.at_s}")
+        if self.count < 1:
+            raise ValueError(f"count must be >= 1, got {self.count}")
+        if not 0.0 < self.frac <= 1.0:
+            raise ValueError(f"frac must be in (0, 1], got {self.frac}")
+        if self.kind in ("stick", "brownout") and self.until_s <= self.at_s:
+            raise ValueError(f"until_s {self.until_s} must be > at_s "
+                             f"{self.at_s} for {self.kind!r} windows")
+        if self.kind == "brownout" and self.factor <= 1.0:
+            raise ValueError(f"brownout factor must be > 1, got {self.factor}")
+
+    def hits(self, pool: str) -> bool:
+        return self.pool is None or self.pool == pool
+
+    def fires(self, pool: str, now: float, step_s: float) -> bool:
+        """Point event lands in the step ``[now, now + step_s)``?"""
+        return self.hits(pool) and now <= self.at_s < now + step_s
+
+    def window_active(self, pool: str, now: float) -> bool:
+        return self.hits(pool) and self.at_s <= now < self.until_s
+
+
+class ScriptedFaults:
+    """Script-driven injector: the same duck-typed attach point as
+    :class:`FaultInjector` (``stuck_builds`` / ``step_draws`` /
+    ``delay_factor`` / ``corr_loss`` / ``reset``) but with EXACT timed
+    events instead of seeded hazards, so a chaos drill replays identically
+    -- same faults at the same virtual times -- on every run.  Stateless:
+    every answer is a pure function of (pool, time), which is what makes
+    same-seed audit logs byte-identical."""
+
+    def __init__(self, events):
+        self.events = tuple(events)
+        for ev in self.events:
+            if not isinstance(ev, ScriptedFault):
+                raise TypeError(f"expected ScriptedFault, got {ev!r}")
+
+    def reset(self) -> None:
+        """Nothing to rewind: the timeline is immutable."""
+
+    def stuck_builds(self, pool: str, count: int, now: float) -> int:
+        for ev in self.events:
+            if ev.kind == "stick" and ev.window_active(pool, now):
+                return int(count)
+        return 0
+
+    def step_draws(self, pool: str, live: int, unhealthy: int, now: float,
+                   step_s: float) -> tuple[int, int, int]:
+        lost = flapped = healed = 0
+        for ev in self.events:
+            if not ev.fires(pool, now, step_s):
+                continue
+            if ev.kind == "lose":
+                lost += ev.count
+            elif ev.kind == "flap":
+                flapped += ev.count
+            elif ev.kind == "heal":
+                healed += ev.count
+        lost = min(lost, live)
+        flapped = min(flapped, max(live - lost - unhealthy, 0))
+        healed = min(healed, unhealthy)
+        return lost, flapped, healed
+
+    def delay_factor(self, pool: str, now: float) -> float:
+        factor = 1.0
+        for ev in self.events:
+            if ev.kind == "brownout" and ev.window_active(pool, now):
+                factor *= ev.factor
+        return factor
+
+    def corr_loss(self, pool: str, live: int, now: float,
+                  step_s: float) -> int:
+        lost = 0
+        for ev in self.events:
+            if ev.kind == "corr_lose" and ev.fires(pool, now, step_s):
+                lost += math.ceil(ev.frac * max(live - lost, 0))
+        return min(lost, live)
+
+
+__all__ = ["FaultInjector", "FaultSpec", "ScriptedFault", "ScriptedFaults"]

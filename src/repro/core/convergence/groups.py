@@ -231,7 +231,7 @@ class ScalingGroup:
                 targets[pool] = PoolTarget(target=raised,
                                            min_units=cur.min_units,
                                            max_units=cur.max_units)
-        return DesiredGroup(targets)
+        return DesiredGroup(targets, generation=desired.generation)
 
     def as_policy(self, lead_s: float = 0.0):
         """Imperative-mode fallback: the group's schedule and webhooks as a

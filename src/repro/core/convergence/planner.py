@@ -22,10 +22,12 @@ from .desired import DesiredGroup
 
 @dataclass(frozen=True)
 class LaunchUnit:
-    """Queue ``count`` new builds of ``pool``."""
+    """Queue ``count`` new builds of ``pool``.  ``gen`` is the desired-state
+    generation the step serves (0 = ungenerationed, pre-epoch callers)."""
 
     pool: str
     count: int
+    gen: int = 0
 
 
 @dataclass(frozen=True)
@@ -36,6 +38,7 @@ class CancelPending:
     pool: str
     count: int
     reason: str = "surplus"
+    gen: int = 0
 
 
 @dataclass(frozen=True)
@@ -44,6 +47,7 @@ class DrainUnit:
 
     pool: str
     count: int
+    gen: int = 0
 
 
 @dataclass(frozen=True)
@@ -52,9 +56,19 @@ class ReplaceUnhealthy:
 
     pool: str
     count: int
+    gen: int = 0
 
 
 Step = Union[LaunchUnit, CancelPending, DrainUnit, ReplaceUnhealthy]
+
+
+def step_record(s: Step) -> dict:
+    """Canonical audit-record form of one step (what ``plan`` records carry
+    and what the replay verifier recomputes -- one serializer, no drift)."""
+    rec = {"step": type(s).__name__, "pool": s.pool, "count": s.count}
+    if isinstance(s, CancelPending):
+        rec["reason"] = s.reason
+    return rec
 
 
 def plan_steps(desired: DesiredGroup,
@@ -71,6 +85,7 @@ def plan_steps(desired: DesiredGroup,
     retry backoff or given up).  ``replace_blocked`` damps health-flap thrash.
     """
     overdue = overdue or {}
+    gen = desired.generation
     stuck_cancels: list[Step] = []
     replaces: list[Step] = []
     downs: list[Step] = []
@@ -78,24 +93,25 @@ def plan_steps(desired: DesiredGroup,
     for name, ps in stats.items():
         od = min(overdue.get(name, 0), ps.pending)
         if od > 0:
-            stuck_cancels.append(CancelPending(name, od, reason="stuck"))
+            stuck_cancels.append(CancelPending(name, od, reason="stuck",
+                                               gen=gen))
         if ps.unhealthy > 0 and name not in replace_blocked:
-            replaces.append(ReplaceUnhealthy(name, ps.unhealthy))
+            replaces.append(ReplaceUnhealthy(name, ps.unhealthy, gen=gen))
         have = ps.units + ps.pending - od
         target = desired.target_of(name) if name in desired.targets else have
         if have > target:
             surplus = have - target
             cancel = min(ps.pending - od, surplus)
             if cancel > 0:
-                downs.append(CancelPending(name, cancel))
+                downs.append(CancelPending(name, cancel, gen=gen))
                 surplus -= cancel
             drainable = min(surplus, max(ps.units - ps.min_units, 0))
             if drainable > 0:
-                downs.append(DrainUnit(name, drainable))
+                downs.append(DrainUnit(name, drainable, gen=gen))
         elif have < target and name not in launch_blocked:
-            ups.append(LaunchUnit(name, target - have))
+            ups.append(LaunchUnit(name, target - have, gen=gen))
     return stuck_cancels + replaces + downs + ups
 
 
 __all__ = ["CancelPending", "DrainUnit", "LaunchUnit", "ReplaceUnhealthy",
-           "Step", "plan_steps"]
+           "Step", "plan_steps", "step_record"]

@@ -48,6 +48,7 @@ from repro.core.autoscaler.base import Policy
 if TYPE_CHECKING:
     from repro.core.convergence.converger import ConvergerConfig
     from repro.core.convergence.faults import FaultSpec
+    from repro.core.convergence.groups import ScalingGroup
 from repro.core.scaling import (
     ControllerConfig,
     RunReport,
@@ -104,7 +105,10 @@ class ClusterConfig:
     convergence: bool = False                # desired-state reconciliation
                                              # (fault-free: bit-for-bit identical)
     converge: "ConvergerConfig | None" = None    # converger timeout/retry knobs
-    faults: "tuple[FaultSpec, ...] | None" = None   # seeded fault injection
+    faults: "tuple[FaultSpec, ...] | None" = None   # seeded fault injection or
+                                                    # a duck-typed injector
+    group: "ScalingGroup | None" = None      # scaling-group pools + scheduled
+                                             # and webhook desired-state floors
     audit_path: str | None = None            # mirror the audit log to JSONL
 
 
@@ -192,9 +196,12 @@ class ElasticCluster:
     appdata composite from `repro.core.autoscaler`)."""
 
     def __init__(self, cfg: ClusterConfig, policy: Policy,
-                 requests: list[ServeRequest]):
+                 requests: list[ServeRequest], *, on_step=None):
         self.cfg = cfg
         self.policy = policy
+        # chaos-drill hook: called as on_step(cluster, t) right after capacity
+        # convergence each step (kill timing, mid-incident webhook fires)
+        self.on_step = on_step
         self.incoming = sorted(requests, key=lambda r: r.arrival_s)
         n = len(self.incoming)
         # struct-of-arrays view of the request stream (vectorized service core)
@@ -238,6 +245,7 @@ class ElasticCluster:
                 convergence=cfg.convergence,
                 converge=cfg.converge,
                 faults=cfg.faults,
+                group=cfg.group,
                 audit_path=cfg.audit_path,
             ),
             bus,
@@ -267,6 +275,9 @@ class ElasticCluster:
         horizon = float(arrival[-1]) + 1.0 if n else 1.0
         while True:
             replicas = ctrl.on_step_start(t)
+            if self.on_step is not None:
+                self.on_step(self, t)
+                replicas = ctrl.plan.total_live   # the hook may move capacity
             # arrivals (arrival-sorted, so the queue is the contiguous index
             # range [q_head, n_arrived))
             hi = int(np.searchsorted(arrival, t, side="right"))
@@ -317,6 +328,9 @@ class ElasticCluster:
             if t > horizon + 48 * 3600:
                 raise RuntimeError("cluster failed to drain")
 
+        if ctrl.audit is not None:       # terminal marker: the run completed
+            ctrl.audit.seal(t)
+            ctrl.audit.close()
         for i, r in enumerate(self.incoming):     # keep the request-object API
             r.done_s = float(done_t[i]) if done_t[i] > 0.0 else None
         done_mask = done_t > 0.0

@@ -427,6 +427,40 @@ class CapacityPlan:
         return sum(s.n_pending + max(s.live - s.pool.min_units, 0)
                    for s in self._state.values())
 
+    def _release_order(self) -> list[_PoolState]:
+        # most expensive first; among equal prices, later-declared pools go
+        # first so the default pool is the last to shrink
+        return sorted(self._state.values(),
+                      key=lambda s: (s.pool.cost_rate,
+                                     self.pools.index(s.pool)),
+                      reverse=True)
+
+    def release_plan(self, count: int) -> list[tuple[str, str, int]]:
+        """Decompose a voluntary release of up to ``count`` units into ordered
+        ``("cancel" | "drain", pool, n)`` operations WITHOUT mutating state.
+
+        Executing the returned operations through :meth:`cancel_pending` /
+        :meth:`drain` (in order) is mechanically identical to
+        :meth:`release` -- same pool order, same queue semantics -- which is
+        what lets the imperative controller actuate through a
+        :class:`~repro.core.convergence.converger.StepExecutor` (and thus
+        drive real replica fleets) without perturbing the golden behavior.
+        """
+        ops: list[tuple[str, str, int]] = []
+        left = int(count)
+        order = self._release_order()
+        for st in order:                       # pass 1: cancel pending
+            take = min(left, st.n_pending)
+            if take > 0:
+                ops.append(("cancel", st.pool.name, take))
+                left -= take
+        for st in order:                       # pass 2: release live
+            take = min(left, max(st.live - st.pool.min_units, 0))
+            if take > 0:
+                ops.append(("drain", st.pool.name, take))
+                left -= take
+        return ops
+
     def release(self, count: int) -> dict[str, int]:
         """Voluntarily release up to ``count`` units, most expensive capacity
         first: pass 1 cancels pending allocations (newest-first within each
@@ -434,12 +468,7 @@ class CapacityPlan:
         the per-pool released counts (sum <= count)."""
         out: dict[str, int] = {}
         left = int(count)
-        # most expensive first; among equal prices, later-declared pools go
-        # first so the default pool is the last to shrink
-        order = sorted(self._state.values(),
-                       key=lambda s: (s.pool.cost_rate,
-                                      self.pools.index(s.pool)),
-                       reverse=True)
+        order = self._release_order()
         for st in order:                       # pass 1: cancel pending
             if left > 0 and (st.pending or st.stuck or st.slow):
                 take = st.cancel(left)

@@ -69,8 +69,10 @@ class ControllerConfig:
     convergence: bool = False        # reconcile toward desired state instead of
                                      # actuating imperative deltas directly
     converge: "ConvergerConfig | None" = None   # timeouts/retries/backoff knobs
-    faults: "tuple[FaultSpec, ...] | None" = None   # seeded fault injection,
-                                                    # threaded through the plan
+    faults: "tuple[FaultSpec, ...] | None" = None   # seeded fault injection
+                                                    # threaded through the plan,
+                                                    # or a pre-built duck-typed
+                                                    # injector (ScriptedFaults)
     group: "ScalingGroup | None" = None   # scaling-group pools + scheduled and
                                           # webhook desired-state floors
     audit_path: str | None = None    # mirror the audit log to a JSONL file
@@ -106,8 +108,13 @@ class ControllerConfig:
                               max_units=self.max_units),)
         injector = None
         if self.faults:
-            from repro.core.convergence.faults import FaultInjector
-            injector = FaultInjector(self.faults)
+            if hasattr(self.faults, "step_draws"):
+                # a pre-built duck-typed injector (e.g. ScriptedFaults for
+                # deterministic chaos drills) passes through as-is
+                injector = self.faults
+            else:
+                from repro.core.convergence.faults import FaultInjector
+                injector = FaultInjector(self.faults)
         return CapacityPlan(pools, starting_units=starting_units,
                             faults=injector)
 
@@ -162,6 +169,14 @@ class ScalingController:
         self._win_arrivals = 0
         self.audit: AuditLog | None = None
         self._converger: Converger | None = None
+        # the actuation seam: BOTH modes actuate through a StepExecutor, so
+        # an engine-backed executor (real replica spawns/drains) serves as
+        # the imperative baseline too.  The default PlanExecutor mutates plan
+        # counters exactly as the pre-seam controller did (golden-pinned).
+        from repro.core.convergence.converger import PlanExecutor
+        self._executor = (self._executor_factory(self.plan)
+                          if self._executor_factory is not None
+                          else PlanExecutor(self.plan))
         if self.cfg.convergence:
             # deferred: repro.core.convergence imports this package
             from repro.core.convergence.audit import AuditLog
@@ -170,10 +185,9 @@ class ScalingController:
             self.audit.append(0.0, "init",
                               pools={p.name: self.plan.live_of(p.name)
                                      for p in self.plan.pools})
-            executor = (self._executor_factory(self.plan)
-                        if self._executor_factory is not None else None)
             self._converger = Converger(self.plan, self.cfg.converge,
-                                        audit=self.audit, executor=executor)
+                                        audit=self.audit,
+                                        executor=self._executor)
         if self.cfg.group is not None:
             self.cfg.group.reset()
         self.policy.reset()
@@ -257,11 +271,19 @@ class ScalingController:
         if down_req > 0 and self.plan.releasable() > 0:
             self.n_down += 1
             want = min(self.cfg.downscale_cap, down_req)
-            for name, c in self.plan.release(want).items():
-                applied_pools[name] = applied_pools.get(name, 0) - c
+            # the plan decomposes the release (expensive-first, cancel before
+            # drain); the executor actuates each op -- identical to the old
+            # plan.release() with the default executor, real teardowns with
+            # an engine-backed one
+            for op, name, cnt in self.plan.release_plan(want):
+                c = (self._executor.cancel_pending(name, cnt, time)
+                     if op == "cancel" else
+                     self._executor.drain(name, cnt, time))
+                if c:
+                    applied_pools[name] = applied_pools.get(name, 0) - c
         for name, dd in deltas.items():
             if dd > 0:
-                queued = self.plan.request(name, dd, time)
+                queued = self._executor.launch(name, dd, time)
                 if queued:
                     applied_pools[name] = applied_pools.get(name, 0) + queued
         if any(dd > 0 for dd in applied_pools.values()):
@@ -334,14 +356,24 @@ class ScalingController:
         return applied_pools
 
     def fire_webhook(self, name: str, now: float):
-        """Arm a scaling-group webhook; its floors overlay the desired state
-        from the next adaptation tick for the trigger's hold window."""
+        """Arm a scaling-group webhook.  Its floors hold for the trigger's
+        window; in convergence mode they land on the desired state NOW --
+        bumping the generation and superseding any in-flight retry backoff
+        on the targeted pools -- so an operator floor raised mid-incident is
+        honored at the next converge pass, not the next adaptation tick.
+        (Imperative mode keeps the legacy semantics: floors apply from the
+        next tick via the group overlay / webhook policy.)"""
         if self.cfg.group is None:
             raise ValueError("no scaling group configured on this controller")
         trig = self.cfg.group.fire(name, now)
         if self.audit is not None:
             self.audit.append(now, "webhook", name=name,
                               targets=dict(trig.targets), hold_s=trig.hold_s)
+        if self._converger is not None and self._converger.desired is not None:
+            desired = self.cfg.group.overlay(self._converger.desired, now)
+            self._converger.set_desired(desired, now,
+                                        reason=f"webhook:{name}",
+                                        refresh=trig.targets.keys())
         return trig
 
 

@@ -36,6 +36,9 @@ class Rule:
 TRACE_SCOPE = (r"src/repro/serving/", r"src/repro/models/",
                r"src/repro/kernels/")
 
-#: scope for the control-plane determinism family
-CONTROL_PLANE_SCOPE = (r"src/repro/core/convergence/",
+#: scope for the control-plane determinism family.  Chaos drills are in
+#: scope too: a drill that reads the wall clock or draws ambient entropy
+#: cannot reproduce the byte-identical audit logs it exists to verify.
+CONTROL_PLANE_SCOPE = (r"src/repro/core/chaos/",
+                       r"src/repro/core/convergence/",
                        r"src/repro/core/scaling/")

@@ -245,17 +245,30 @@ class ReplicaPool:
                 / max(self.total_slots(), 1))
 
 
+def _restartable(m: MigratedRequest) -> bool:
+    """True when a migrated entry holds NO decode progress -- a fresh submit
+    is exactly equivalent (kill-path restarts and drained queued-but-
+    unadmitted requests).  Entries holding committed KV or emitted tokens
+    must go through priority re-admission to keep their progress."""
+    return (m.pos == 0 and m.kv_chunks is None
+            and m.remaining == m.req.max_new_tokens and not m.req.output)
+
+
 class FleetRouter:
     """SLA-class-aware front door over a :class:`ReplicaPool`.
 
-    Admission order: the migrated backlog first (those requests hold decode
-    progress), then the queue -- FIFO by default; with an ``sla``, strictest
-    absolute deadline (arrival + class deadline) first, so under page
-    pressure the cheapest class (longest deadline) is the one left waiting.
-    A request is handed to a replica only when it can be admitted THERE
-    right now: a free slot under the cap and worst-case page admission --
-    the same test the engine's own scheduler applies, so a single-replica
-    fleet admits on exactly the bare engine's schedule.
+    Admission order: migrated entries holding decode progress first (their
+    committed KV must land on a survivor), then the queue -- FIFO by
+    default; with an ``sla``, strictest absolute deadline (arrival + class
+    deadline) first, so under page pressure the cheapest class (longest
+    deadline) is the one left waiting.  Requests restarting from scratch
+    after a ``kill`` hold NO progress, so they re-enter the queue at their
+    ORIGINAL deadline (``arrival_s`` survives the kill) -- a crash must not
+    launder a cheap class past premium queued work, nor reset the victim's
+    own SLA clock.  A request is handed to a replica only when it can be
+    admitted THERE right now: a free slot under the cap and worst-case page
+    admission -- the same test the engine's own scheduler applies, so a
+    single-replica fleet admits on exactly the bare engine's schedule.
     """
 
     def __init__(self, pool: ReplicaPool, sla=None):
@@ -279,11 +292,20 @@ class FleetRouter:
         del now
         pool = self.pool
         placed = 0
+        folded = False
         backlog, pool.migrated = pool.migrated, []
-        for m in backlog:                  # re-admission keeps progress
-            placed += bool(pool.place_migrated(m))
+        for m in backlog:
+            if _restartable(m):            # no progress: back through the
+                self.queue.append(m.req)   # queue at the original deadline
+                folded = True
+            else:                          # re-admission keeps progress
+                placed += bool(pool.place_migrated(m))
         if self.sla is not None and len(self.queue) > 1:
             self.queue.sort(key=self._deadline)   # stable: FIFO within ties
+        elif folded and len(self.queue) > 1:
+            # no SLA classes: restore global arrival order (stable, so
+            # same-arrival submits keep their relative order)
+            self.queue.sort(key=lambda r: r.arrival_s)
         # per-replica pages/slots promised in THIS pass (reservations only
         # execute inside the engine's next step)
         planned: dict[int, int] = {}
@@ -332,10 +354,16 @@ class FleetExecutor:
     booked as a measured stuck build, which the converger's existing
     timeout / cancel / backoff machinery then handles."""
 
-    def __init__(self, pool: ReplicaPool, plan, name: str = FLEET_POOL):
+    def __init__(self, pool: ReplicaPool, plan, name: str = FLEET_POOL, *,
+                 calibrate: bool = True):
         self.pool = pool
         self.plan = plan
         self.name = name
+        # calibrate=False books the CONFIGURED provisioning delay instead of
+        # the measured spawn wall time: chaos drills need the plan's landing
+        # clock -- and therefore the audit log -- byte-identical across
+        # same-seed re-runs, which measured wall time can never be
+        self.calibrate = calibrate
         self._stuck = 0      # measured stuck builds currently on the books
 
     def launch(self, pool: str, count: int, now: float) -> int:
@@ -347,7 +375,8 @@ class FleetExecutor:
                 applied += self.plan.queue_stuck(pool, 1, now)
                 self._stuck += 1
                 continue
-            self.plan.calibrate_delay(pool, dt)
+            if self.calibrate:
+                self.plan.calibrate_delay(pool, dt)
             queued = self.plan.request(pool, 1, now)
             if queued:
                 self.pool.provisioning.append((now + dt, rep))
@@ -408,6 +437,7 @@ class FleetBackend:
                  max_replicas: int = 4, min_replicas: int = 1,
                  provision_delay_s: float = 3.0, cost_rate: float = 1.0,
                  decode_steps: int = 1, sla=None, converge=None,
+                 convergence: bool = True, group=None, calibrate: bool = True,
                  audit_path=None, on_step=None):
         self.pool = pool
         self.router = FleetRouter(pool, sla=sla)
@@ -424,6 +454,13 @@ class FleetBackend:
         unit_pool = UnitPool(FLEET_POOL, provision_delay_s=provision_delay_s,
                              cost_rate=cost_rate, min_units=min_replicas,
                              max_units=max_replicas)
+        # convergence=False is the imperative baseline the chaos drills
+        # compare against: same real spawns/drains through the same
+        # FleetExecutor (the controller's actuation seam), but no desired
+        # state, no healing, no retry machinery -- faults are only repaired
+        # if the policy happens to vote capacity back.  calibrate=False
+        # books configured (not measured) provisioning delays so a scripted
+        # drill's audit log is byte-identical across same-seed re-runs.
         self.controller = ScalingController(
             policy,
             ControllerConfig(
@@ -432,21 +469,29 @@ class FleetBackend:
                 app_window_s=app_window_s,
                 signal_channel="output_score",
                 pools=(unit_pool,),
-                convergence=True,
+                convergence=convergence,
                 converge=converge,
+                group=group,
                 audit_path=audit_path,
             ),
             SignalBus(FLEET_CHANNELS, bin_s=1.0),
             starting_units=starting_replicas,
-            executor_factory=lambda plan: FleetExecutor(pool, plan,
-                                                        FLEET_POOL),
+            executor_factory=lambda plan: FleetExecutor(
+                pool, plan, FLEET_POOL, calibrate=calibrate),
         )
         # the starting fleet spawns for real, NOW: the measured wall time
         # calibrates the pool's provisioning delay from step zero
         for _ in range(starting_replicas):
             rep, dt = pool.spawn()
-            self.controller.plan.calibrate_delay(FLEET_POOL, dt)
+            if calibrate:
+                self.controller.plan.calibrate_delay(FLEET_POOL, dt)
             pool.serving.append(rep)
+
+    def fire_webhook(self, name: str, now: float):
+        """Mid-incident operator intent: arm the scaling group's webhook
+        ``name`` (convergence mode applies its floors to the desired state
+        immediately -- see ``ScalingController.fire_webhook``)."""
+        return self.controller.fire_webhook(name, now)
 
     def _collect_completions(self) -> list[Request]:
         fresh = []
@@ -507,6 +552,9 @@ class FleetBackend:
             if t > self.horizon_s + 10_000:
                 raise RuntimeError("fleet backend failed to drain")
 
+        if ctrl.audit is not None:
+            ctrl.audit.seal(t)
+            ctrl.audit.close()
         units_arr = np.asarray(units_hist, dtype=np.int64)
         lat = np.array([r.done_s - r.arrival_s for r in self.completed])
         classes = np.array([f"p{r.request_class[0]}d{r.request_class[1]}"

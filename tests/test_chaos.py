@@ -1,0 +1,224 @@
+"""Chaos-drill layer: deterministic fault scripts (seeded victim choice,
+byte-identical replay), the invariant checkers that define "recovered
+correctly" (exactly-once, bit-identical outputs, KV conservation, sealed
+audit replay), and the drill harness plumbing.  The end-to-end drill over a
+REAL replica fleet lives in tests/test_fleet.py (shared spawn fixture); the
+converger-vs-baseline soak is benchmarks/chaos_drills.py."""
+import pytest
+
+from repro.core.chaos import (
+    ChaosAction,
+    ChaosScript,
+    Violation,
+    check_audit,
+    check_exactly_once,
+    check_kv_conservation,
+    check_outputs_match,
+)
+from repro.core.convergence import (
+    AuditLog,
+    Converger,
+    ConvergerConfig,
+    DesiredGroup,
+    PoolTarget,
+    ScriptedFault,
+    ScriptedFaults,
+)
+from repro.core.scaling import CapacityPlan, UnitPool
+
+
+# ---------------------------------------------------------------------------------
+# fakes: just enough surface for the script to actuate
+# ---------------------------------------------------------------------------------
+
+class _FakeReplica:
+    def __init__(self, rix):
+        self.rix = rix
+
+
+class _FakePool:
+    def __init__(self, n):
+        self.serving = [_FakeReplica(i) for i in range(n)]
+
+
+class _FakeTarget:
+    """Duck-typed drill target: records every actuation in order."""
+
+    def __init__(self, n_replicas):
+        self.pool = _FakePool(n_replicas)
+        self.calls = []
+
+    def kill_replica(self, rep, now):
+        self.pool.serving.remove(rep)
+        self.calls.append(("kill", rep.rix, now))
+
+    def fire_webhook(self, name, now):
+        self.calls.append(("webhook", name, now))
+
+
+class _Req:
+    def __init__(self, rid, output=(1, 2, 3), done_s=5.0):
+        self.rid = rid
+        self.output = list(output)
+        self.done_s = done_s
+
+
+# ---------------------------------------------------------------------------------
+# scripts
+# ---------------------------------------------------------------------------------
+
+def test_chaos_action_validation():
+    with pytest.raises(ValueError, match="unknown action kind"):
+        ChaosAction(0.0, "explode")
+    with pytest.raises(ValueError, match="needs a name"):
+        ChaosAction(0.0, "webhook")
+    with pytest.raises(ValueError, match="frac"):
+        ChaosAction(0.0, "corr_kill", frac=0.0)
+    with pytest.raises(ValueError, match="at_s"):
+        ChaosAction(-1.0, "kill")
+    with pytest.raises(TypeError):
+        ChaosScript([object()])
+
+
+def test_script_fires_in_order_and_replays_identically():
+    """Actions fire on the first step at/past their timestamp, kills land
+    before same-instant webhooks, victims are a seeded draw -- and reset()
+    rewinds to a byte-identical re-run (the audit-determinism property)."""
+    script = ChaosScript([
+        ChaosAction(4.0, "webhook", name="surge"),
+        ChaosAction(4.0, "kill", count=1),
+        ChaosAction(7.5, "corr_kill", frac=0.5),
+    ], seed=11)
+    assert [a.kind for a in script.actions] == ["kill", "webhook",
+                                                "corr_kill"]
+
+    def run():
+        target = _FakeTarget(5)
+        for t in range(10):
+            script.on_step(target, float(t))
+        return target.calls
+
+    first = run()
+    assert script.done
+    kinds = [c[0] for c in first]
+    assert kinds[:2] == ["kill", "webhook"]        # same-instant ordering
+    assert len([c for c in first if c[0] == "kill" and c[2] == 4.0]) == 1
+    # corr_kill at 7.5 fires at the t=8 step: ceil(0.5 * 4 live) = 2 victims
+    corr = [c for c in first if c[2] == 8.0]
+    assert len(corr) == 2 and all(c[0] == "kill" for c in corr)
+    fired = list(script.fired)
+    script.reset()
+    assert run() == first                          # same seed, same victims
+    assert script.fired == fired
+
+
+# ---------------------------------------------------------------------------------
+# invariant checkers
+# ---------------------------------------------------------------------------------
+
+def test_exactly_once_checker_catches_loss_dupes_phantoms():
+    ok = [_Req(0), _Req(1)]
+    assert check_exactly_once([0, 1], ok) == []
+    # a lost request is only a violation at drill END, not mid-flight
+    assert check_exactly_once([0, 1, 2], ok, final=False) == []
+    lost = check_exactly_once([0, 1, 2], ok)
+    assert len(lost) == 1 and "never completed" in lost[0].detail
+    dup = check_exactly_once([0, 1], ok + [_Req(1)])
+    assert any("2 times" in v.detail for v in dup)
+    phantom = check_exactly_once([0], ok)
+    assert any("never admitted" in v.detail for v in phantom)
+    hollow = check_exactly_once([0], [_Req(0, output=())])
+    assert any("without output" in v.detail for v in hollow)
+
+
+def test_outputs_match_checker_reports_first_divergence():
+    ref = [_Req(0, output=(1, 2, 3)), _Req(1, output=(4, 5))]
+    assert check_outputs_match([_Req(0), _Req(1, output=(4, 5))], ref) == []
+    bad = check_outputs_match([_Req(0, output=(1, 9, 3))], ref)
+    assert len(bad) == 1 and "token 1" in bad[0].detail
+    trunc = check_outputs_match([_Req(1, output=(4,))], ref)
+    assert len(trunc) == 1 and "token 1" in trunc[0].detail
+    orphan = check_outputs_match([_Req(7)], ref)
+    assert len(orphan) == 1 and "no fault-free reference" in orphan[0].detail
+    assert str(bad[0]).startswith("bit_identical:")
+    assert isinstance(bad[0], Violation)
+
+
+def test_check_audit_layers(tmp_path):
+    """check_audit reports (not raises) on a broken seal, cross-checks the
+    capacity replay against the plan's final state, and flags doctored
+    planner steps through verify_plan_replay."""
+    path = str(tmp_path / "a.jsonl")
+    plan = CapacityPlan(
+        (UnitPool("od", provision_delay_s=2.0, max_units=8),),
+        starting_units=1,
+        faults=ScriptedFaults((ScriptedFault(3.0, "lose", pool="od"),)))
+    conv = Converger(plan, ConvergerConfig(build_timeout_s=10.0),
+                     audit=AuditLog(path))
+    # the controller normally writes the init record; do it by hand here
+    conv.audit.append(0.0, "init", pools={"od": 1})
+    conv.set_desired(DesiredGroup({"od": PoolTarget(3, 1, 8)}), 0.0)
+    t = 0.0
+    for _ in range(20):
+        plan.land(t)
+        conv.converge(t)
+        t += 1.0
+    conv.audit.seal(t)
+    conv.audit.close()
+    final = {"od": {"live": plan.live_of("od"),
+                    "pending": plan.pending_of("od")}}
+    assert check_audit(path, final) == []
+    # wrong final state: the replay cross-check names the pool
+    drifted = {"od": {"live": final["od"]["live"] + 1, "pending": 0}}
+    assert any("replay gives" in v.detail for v in check_audit(path, drifted))
+    # truncated tail: reported as a violation, not an exception
+    with open(path) as fh:
+        lines = fh.read().splitlines()
+    p2 = str(tmp_path / "torn.jsonl")
+    with open(p2, "w") as fh:
+        fh.write("\n".join(lines[:-1]) + "\n")
+    broken = check_audit(p2)
+    assert len(broken) == 1 and broken[0].invariant == "audit_replay"
+    assert "seal" in broken[0].detail
+
+
+def test_kv_conservation_checker_skips_killed_replicas():
+    """Only engines that still exist are checked: serving replicas must
+    balance, drained replicas must be empty, killed ones are skipped."""
+
+    class _KV:
+        def __init__(self, n_free, num_pages, fail=False):
+            self.n_free = n_free
+            self.num_pages = num_pages
+            self.fail = fail
+
+        def check_invariants(self):
+            assert not self.fail, "page leak"
+
+    class _Eng:
+        def __init__(self, kv):
+            self.kv = kv
+
+    class _Rep:
+        def __init__(self, rix, kv, draining=False):
+            self.rix = rix
+            self.eng = _Eng(kv)
+            self.draining = draining
+
+    class _Pool:
+        def __init__(self, serving, retired):
+            self.serving = serving
+            self.retired = retired
+
+    healthy = _Pool([_Rep(0, _KV(9, 10))], [])
+    assert check_kv_conservation(healthy, drained=True) == []
+    leaky = _Pool([_Rep(0, _KV(5, 10, fail=True))], [])
+    assert any("page leak" in v.detail for v in check_kv_conservation(leaky))
+    held = _Pool([_Rep(0, _KV(7, 10))], [])
+    assert check_kv_conservation(held) == []          # mid-drill: fine
+    assert any("still held" in v.detail
+               for v in check_kv_conservation(held, drained=True))
+    stranded = _Pool([], [_Rep(1, _KV(6, 10), draining=True),
+                          _Rep(2, _KV(0, 10), draining=False)])  # killed
+    out = check_kv_conservation(stranded)
+    assert len(out) == 1 and "stranded 3 pages" in out[0].detail

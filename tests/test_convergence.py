@@ -19,6 +19,7 @@ from repro.core.autoscaler import (
 )
 from repro.core.autoscaler.base import Observation
 from repro.core.convergence import (
+    AuditIntegrityError,
     AuditLog,
     CancelPending,
     Converger,
@@ -31,12 +32,15 @@ from repro.core.convergence import (
     PoolTarget,
     ReplaceUnhealthy,
     ScalingGroup,
+    ScriptedFault,
+    ScriptedFaults,
     StepExecutor,
     derive_desired,
     observed_group,
     plan_steps,
     replay,
     validate_group_config,
+    verify_plan_replay,
 )
 from repro.core.scaling import (
     CapacityPlan,
@@ -671,3 +675,190 @@ def test_webhook_policy_imperative_mode():
     assert gp.decide(obs(150.0, 1)).delta == 3    # scheduled total floor 4
     gp.fire("breaking-news", 150.0)
     assert gp.decide(obs(150.0, 1)).delta == 5    # webhook total floor 6
+
+
+# ---------------------------------------------------------------------------------
+# incident hardening: scripted faults, generation/supersede, sealed audit logs
+# ---------------------------------------------------------------------------------
+
+def test_scripted_faults_fire_exactly_on_schedule():
+    """ScriptedFaults is the deterministic injector behind chaos drills:
+    point events land in the step containing their timestamp (exactly once),
+    windows cover [at_s, until_s), and corr_lose hits every matching pool in
+    the SAME step -- the correlation is the shared timeline, not a draw."""
+    sf = ScriptedFaults((
+        ScriptedFault(5.0, "lose", pool="od", count=2),
+        ScriptedFault(8.0, "corr_lose", frac=0.5),
+        ScriptedFault(10.0, "stick", pool="od", until_s=20.0),
+        ScriptedFault(10.0, "brownout", pool="od", until_s=30.0, factor=3.0),
+    ))
+    assert sf.step_draws("od", 4, 0, 5.0, 1.0) == (2, 0, 0)
+    assert sf.step_draws("od", 4, 0, 6.0, 1.0) == (0, 0, 0)
+    assert sf.step_draws("spot", 4, 0, 5.0, 1.0) == (0, 0, 0)   # pool-scoped
+    assert sf.corr_loss("od", 4, 8.0, 1.0) == 2
+    assert sf.corr_loss("spot", 3, 8.0, 1.0) == 2               # same step
+    assert sf.corr_loss("od", 4, 9.0, 1.0) == 0
+    assert sf.stuck_builds("od", 3, 9.0) == 0
+    assert sf.stuck_builds("od", 3, 10.0) == 3
+    assert sf.stuck_builds("od", 3, 20.0) == 0                  # half-open
+    assert sf.delay_factor("od", 15.0) == 3.0
+    assert sf.delay_factor("od", 30.0) == 1.0
+    sf.reset()                       # stateless: reset replays identically
+    assert sf.step_draws("od", 4, 0, 5.0, 1.0) == (2, 0, 0)
+    with pytest.raises(ValueError, match="kind"):
+        ScriptedFault(0.0, "explode")
+    with pytest.raises(ValueError, match="until_s"):
+        ScriptedFault(5.0, "stick", until_s=5.0)
+    with pytest.raises(TypeError):
+        ScriptedFaults((FaultSpec(),))
+
+
+def test_floor_raise_mid_backoff_discards_retry_state():
+    """A desired-state change landing MID-BACKOFF supersedes the retry: the
+    backoff gate and attempt budget are DISCARDED (not resumed), the
+    generation bumps, and the converger launches immediately -- far inside
+    what would have been the stale backoff window.  The operator's floor
+    wins over the stale retry."""
+    plan = CapacityPlan(
+        (UnitPool("od", provision_delay_s=5.0, max_units=8),),
+        starting_units=1,
+        faults=ScriptedFaults((ScriptedFault(0.0, "brownout", pool="od",
+                                             until_s=40.0, factor=12.0),)))
+    conv = Converger(plan, ConvergerConfig(build_timeout_s=5.0,
+                                           backoff_base_s=100.0,
+                                           backoff_max_s=400.0,
+                                           max_retries=5),
+                     audit=AuditLog())
+    conv.set_desired(DesiredGroup({"od": PoolTarget(3, 1, 8)}), 0.0)
+    gen0 = conv.desired.generation
+    t = 0.0
+    while t < 60.0 and not any(r["kind"] == "backoff"
+                               for r in conv.audit.records):
+        plan.land(t)
+        conv.converge(t)
+        t += 1.0
+    gate = next(r for r in conv.audit.records if r["kind"] == "backoff")
+    assert gate["until"] >= t + 90.0   # a LONG backoff is armed mid-incident
+    # operator floor raise lands mid-retry
+    conv.set_desired(DesiredGroup({"od": PoolTarget(5, 3, 8)}), t,
+                     reason="webhook:floor")
+    assert conv.desired.generation == gen0 + 1
+    assert any(r["kind"] == "superseded" and r["pool"] == "od"
+               for r in conv.audit.records)
+    out = conv.converge(t)
+    launched = [o for o in out
+                if isinstance(o.step, LaunchUnit) and o.applied > 0]
+    assert launched, "supersede did not un-gate the launch"
+    assert t < gate["until"], "the launch happened inside the stale window"
+    # every step after the supersede carries the new generation
+    last_launch = [r for r in conv.audit.records
+                   if r["kind"] == "step" and r["step"] == "LaunchUnit"][-1]
+    assert last_launch["gen"] == gen0 + 1
+
+
+def test_refresh_unparks_same_target_and_replays(tmp_path):
+    """A webhook re-asserting an UNCHANGED numeric target still supersedes
+    (refresh names the pool): the parked/backing-off pool un-parks, and the
+    sealed audit log replays the planner's decisions byte-for-byte."""
+    path = str(tmp_path / "audit.jsonl")
+    plan = CapacityPlan(
+        (UnitPool("od", provision_delay_s=5.0, max_units=8),),
+        starting_units=1,
+        faults=ScriptedFaults((ScriptedFault(0.0, "stick", pool="od",
+                                             until_s=25.0),)))
+    conv = Converger(plan, ConvergerConfig(build_timeout_s=4.0,
+                                           backoff_base_s=60.0,
+                                           backoff_max_s=240.0,
+                                           max_retries=5),
+                     audit=AuditLog(path))
+    conv.set_desired(DesiredGroup({"od": PoolTarget(3, 1, 8)}), 0.0)
+    t = 0.0
+    while t < 40.0 and not any(r["kind"] == "backoff"
+                               for r in conv.audit.records):
+        plan.land(t)
+        conv.converge(t)
+        t += 1.0
+    gen_before = conv.desired.generation
+    # same target, but the operator re-asserts it: refresh supersedes
+    conv.set_desired(DesiredGroup({"od": PoolTarget(3, 1, 8)}), t,
+                     reason="webhook:reassert", refresh=("od",))
+    assert conv.desired.generation == gen_before + 1
+    out = conv.converge(t)
+    assert any(isinstance(o.step, LaunchUnit) and o.applied > 0 for o in out)
+    conv.audit.seal(t)
+    conv.audit.close()
+    records = AuditLog.load(path, verify=True)
+    checked, mismatches = verify_plan_replay(records)
+    assert checked > 0 and mismatches == []
+
+
+def test_audit_seal_verify_detects_truncation_and_tampering(tmp_path):
+    """load(verify=True) mirrors the checkpoint store's .ok semantics: a
+    clean sealed log round-trips; a missing seal, a torn JSON tail, a
+    dropped record, or an in-place edit each raise AuditIntegrityError
+    naming the failure."""
+    path = str(tmp_path / "audit.jsonl")
+    log = AuditLog(path)
+    for k in range(5):
+        log.append(float(k), "plan", gen=1, steps=[])
+    log.seal(5.0)
+    log.close()
+    records = AuditLog.load(path, verify=True)
+    assert records[-1]["kind"] == "seal" and records[-1]["n"] == 5
+    with open(path) as fh:
+        lines = fh.read().splitlines()
+
+    def write(name, content_lines):
+        p = str(tmp_path / name)
+        with open(p, "w") as fh:
+            fh.write("\n".join(content_lines) + "\n")
+        return p
+
+    # unsealed tail: the run was cut off mid-incident
+    with pytest.raises(AuditIntegrityError, match="no terminal seal"):
+        AuditLog.load(write("trunc.jsonl", lines[:-1]), verify=True)
+    # torn write: half a record then EOF
+    with pytest.raises(AuditIntegrityError, match="corrupt record"):
+        AuditLog.load(write("torn.jsonl", lines[:-1] + ['{"t": 4.0, "ki']),
+                      verify=True)
+    # a dropped record: seal count no longer matches
+    with pytest.raises(AuditIntegrityError, match="seal claims"):
+        AuditLog.load(write("dropped.jsonl", lines[:2] + lines[3:]),
+                      verify=True)
+    # an in-place edit: CRC mismatch
+    doctored = list(lines)
+    doctored[1] = doctored[1].replace('"gen": 1', '"gen": 9')
+    with pytest.raises(AuditIntegrityError, match="CRC mismatch"):
+        AuditLog.load(write("edited.jsonl", doctored), verify=True)
+    # unverified load still reads the unsealed file (forensics mode)
+    assert len(AuditLog.load(str(tmp_path / "trunc.jsonl"))) == 5
+
+
+def test_plan_replay_reproduces_faulted_run_decisions(tmp_path):
+    """Full-fidelity replay of a FAULTED convergence run: re-running the
+    pure planner over every plan record's logged inputs reproduces the
+    converger's decisions exactly, and a doctored step is caught."""
+    path = str(tmp_path / "audit.jsonl")
+    faults = (FaultSpec(loss_rate=1 / 40.0, start_s=20.0, end_s=60.0,
+                        seed=5),)
+    ctrl = _ctrl(_Script([3, 0, -2, 0, 1]), convergence=True, starting=2,
+                 delay=5.0, faults=faults, audit_path=path)
+    _drive(ctrl, 120)
+    ctrl.audit.seal(120.0)
+    ctrl.audit.close()
+    records = AuditLog.load(path, verify=True)
+    checked, mismatches = verify_plan_replay(records)
+    assert checked > 0 and mismatches == []
+    assert replay(records) == _final_state(ctrl.plan)
+    # a doctored step count is a steps mismatch
+    doctored = [json.loads(json.dumps(r)) for r in records]
+    plan_rec = next(r for r in doctored if r["kind"] == "plan" and r["steps"])
+    plan_rec["steps"][0]["count"] += 1
+    _, caught = verify_plan_replay(doctored)
+    assert caught and caught[0]["kind"] == "steps"
+    # a stale-generation plan is a generation mismatch
+    doctored2 = [json.loads(json.dumps(r)) for r in records]
+    plan_rec2 = next(r for r in doctored2 if r["kind"] == "plan")
+    plan_rec2["gen"] = plan_rec2.get("gen", 0) + 7
+    _, caught2 = verify_plan_replay(doctored2)
+    assert any(m["kind"] == "generation" for m in caught2)

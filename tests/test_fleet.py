@@ -220,6 +220,52 @@ def test_router_sheds_cheapest_class_first(fleet_env):
     assert [r.rid for r in router.queue] == [2], "cheap class should shed"
 
 
+def test_kill_requeues_at_original_deadline(fleet_env):
+    """A killed replica's restarted requests re-enter the deadline queue at
+    their ORIGINAL deadline (arrival survives the kill) -- re-admission must
+    not jump a premium request that arrived later with a tighter absolute
+    deadline.  Regression: the migrated backlog used to bypass the queue via
+    direct placement, so a crash laundered cheap work past premium."""
+    cfg, pool = _make_pool(fleet_env, 2, max_batch=1)
+    sla = Sla(default_s=100.0, per_class={"p32d16": 5.0})
+    router = FleetRouter(pool, sla=sla)
+    rng = np.random.default_rng(13)
+    # one blocker per replica: rid 0 runs long on A, cheap rid 1 sits on B
+    blocker = Request(rid=0, prompt=rng.integers(0, cfg.vocab,
+                                                 8).astype(np.int32),
+                      max_new_tokens=40)
+    cheap = Request(rid=1, prompt=rng.integers(0, cfg.vocab,
+                                               8).astype(np.int32),
+                    max_new_tokens=16)           # p16d16 -> 100 s deadline
+    router.submit(blocker)
+    router.submit(cheap)
+    router.dispatch(0.0)
+    for rep in pool.serving:
+        rep.step(0.0, decode_steps=1)
+    victim = next(r for r in pool.serving
+                  if 1 in {q.rid for q in r.eng.active.values()})
+    pool.kill(victim)                            # cheap restarts from scratch
+    assert pool.migrated and pool.migrated[0].req.rid == 1
+    # premium arrives AFTER the kill with a tighter absolute deadline
+    premium = Request(rid=2, arrival_s=1.0,
+                      prompt=rng.integers(0, cfg.vocab, 24).astype(np.int32),
+                      max_new_tokens=16)         # p32d16 -> deadline 6 s
+    router.submit(premium)
+    router.dispatch(1.0)
+    # the restarted cheap request folded into the queue BEHIND premium
+    assert not pool.migrated
+    assert [r.rid for r in router.queue] == [2, 1]
+    for t in range(2, 60):                       # blocker frees the only slot
+        pool.serving[0].step(float(t), decode_steps=2)
+        if 0 in {r.rid for r in pool.serving[0].eng.completed}:
+            break
+    router.dispatch(float(t))
+    pool.serving[0].step(float(t), decode_steps=1)
+    active_rids = {r.rid for r in pool.serving[0].eng.active.values()}
+    assert 2 in active_rids, "crash restart outranked the premium class"
+    assert [r.rid for r in router.queue] == [1]
+
+
 def test_converger_heals_killed_replica(fleet_env):
     """Abrupt replica loss mid-run: the plan records a measured unit loss
     and the converger heals it with a REAL respawn; every request (including
@@ -272,3 +318,32 @@ def test_executor_books_stuck_spawn_and_cancels_it_first(fleet_env):
     # cancel the other: now the provisioning replica is discarded
     assert ex.cancel_pending(FLEET_POOL, 1, now=2.0) == 1
     assert not pool.provisioning and len(pool.retired) == 1
+
+
+def test_chaos_drill_kill_under_load_is_observationally_equivalent(
+        fleet_env, tmp_path):
+    """End-to-end ChaosDrill over REAL engines: a replica killed under
+    burst load heals, and the whole invariant battery -- exactly-once,
+    bit-identical outputs vs the fault-free reference, KV page
+    conservation, sealed audit replay -- comes back green."""
+    from repro.core.chaos import ChaosAction, ChaosDrill, ChaosScript
+
+    def make_backend(*, on_step, audit_path):
+        cfg, pool = _make_pool(fleet_env, 0)
+        rng = np.random.default_rng(21)
+        reqs = _requests(cfg, rng, 10, arrival=lambda i: float(i // 2),
+                         decode=lambda i: 4 + i % 3)
+        return FleetBackend(pool, reqs, sla_s=60.0, horizon_s=8.0,
+                            policy=_Hold(), starting_replicas=2,
+                            max_replicas=3, adapt_period_s=2.0,
+                            app_window_s=4.0, decode_steps=2,
+                            calibrate=False, on_step=on_step,
+                            audit_path=audit_path)
+
+    script = ChaosScript([ChaosAction(3.0, "kill", count=1)], seed=5)
+    drill = ChaosDrill("kill-under-load", make_backend, script,
+                       audit_path=str(tmp_path / "drill.jsonl"))
+    report = drill.run()
+    assert report.fired and report.fired[0]["kind"] == "kill"
+    assert report.n_completed == 10 == report.n_reference
+    assert report.ok, report.summary()
